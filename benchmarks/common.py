@@ -1,0 +1,19 @@
+"""Shared benchmark helpers: CSV emission in the harness contract
+(name,us_per_call,derived)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6

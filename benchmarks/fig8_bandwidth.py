@@ -1,0 +1,53 @@
+"""Paper Fig. 8: memory-bandwidth sweep 400 -> 3200 GB/s on the A100-like
+base design.
+
+Claims (C4): prefill gains ~14.3% from 800->2000 GB/s then flattens
+(+3.5% to 3200); decode speeds up 1.88x from 800->2000 and +26% more to
+3200; implication (3): decoding is much more bandwidth-sensitive."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import hardware as hw
+from repro.core.graph import Plan, layer_ops
+from repro.configs import get_config
+
+from .common import emit
+
+
+def run() -> dict:
+    cfg = get_config("gpt3-175b")
+    plan = Plan(tp=4)
+    base = hw.nvidia_a100()
+    lat = {}
+    for bw in (400, 800, 1200, 1600, 2000, 2400, 2800, 3200):
+        dev = replace(base, main_memory=replace(base.main_memory,
+                                                bandwidth_bytes=bw * 1e9))
+        node = hw.make_system(dev, 4, 600, "fc")
+        pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
+        dc = layer_ops(cfg, node, plan, 0, batch=8, seq=1, kv_len=3072)
+        lat[bw] = (pf.latency, dc.latency)
+        emit(f"fig8/bw{bw}_prefill", pf.latency * 1e6,
+             f"ms={pf.latency * 1e3:.2f}")
+        emit(f"fig8/bw{bw}_decode", dc.latency * 1e6,
+             f"ms={dc.latency * 1e3:.4f}")
+    pf_gain = lat[800][0] / lat[2000][0]
+    pf_tail = lat[2000][0] / lat[3200][0]
+    dc_gain = lat[800][1] / lat[2000][1]
+    dc_tail = lat[2000][1] / lat[3200][1]
+    checks = {
+        "prefill_800_2000_x": round(pf_gain, 3),       # paper: 1.167
+        "prefill_2000_3200_x": round(pf_tail, 3),      # paper: 1.035
+        "decode_800_2000_x": round(dc_gain, 3),        # paper: 1.88
+        "decode_2000_3200_x": round(dc_tail, 3),       # paper: 1.26
+        "decode_more_sensitive": dc_gain > pf_gain * 1.3,
+        "prefill_flattens": pf_tail < 1.12,
+    }
+    emit("fig8/claims", 0.0,
+         f"pf_800to2000={pf_gain:.2f}x(paper1.17);"
+         f"dc_800to2000={dc_gain:.2f}x(paper1.88)")
+    return checks
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

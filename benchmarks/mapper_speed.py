@@ -1,0 +1,46 @@
+"""Paper Sec. I / C8: simulation speed.
+
+Paper: simulating a 4-A100 node running GPT-3 175B inference takes 15-16
+minutes on one Xeon core, including 26,400 mapper search rounds. Our
+mapper evaluates the whole candidate space as one numpy broadcast — this
+benchmark measures the same workload end-to-end and reports the speedup
+(a beyond-paper improvement recorded in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import hardware as hw
+from repro.core.graph import Plan, model_ops
+from repro.core.mapper import matmul_perf
+from repro.configs import get_config
+
+from .common import emit
+
+
+def run() -> dict:
+    matmul_perf.cache_clear()
+    cfg = get_config("gpt3-175b")
+    node = hw.dgx_a100(4)
+    plan = Plan(tp=4)
+    t0 = time.perf_counter()
+    # full GPT-3 inference sim: prefill + decode at several KV depths
+    # (the paper's workload: batch 8, input 2048, generating 1024 tokens)
+    pf = model_ops(cfg, node, plan, batch=8, seq=2048, kv_len=2048)
+    dcs = [model_ops(cfg, node, plan, batch=8, seq=1, kv_len=2048 + k)
+           for k in (1, 256, 512, 768, 1024)]
+    dt = time.perf_counter() - t0
+    ci = matmul_perf.cache_info()
+    emit("mapper/gpt3_4xA100_full_sim", dt * 1e6,
+         f"seconds={dt:.1f};paper_seconds=930;speedup={930 / max(dt, 1e-9):.0f}x;"
+         f"unique_matmuls={ci.misses}")
+    dec_ms = sum(d.latency for d in dcs) / len(dcs) * 96 * 1e3
+    emit("mapper/gpt3_predictions", 0.0,
+         f"prefill_s={pf.latency * 96 / 96:.3f}x96layers;"
+         f"decode_ms_per_tok={dec_ms:.1f}")
+    return {"sim_seconds": round(dt, 2),
+            "speedup_vs_paper": round(930 / max(dt, 1e-9)),
+            "faster_than_paper": dt < 930}
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

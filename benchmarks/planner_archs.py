@@ -1,0 +1,38 @@
+"""Beyond-paper benchmark: the LLMCompass-based parallelism planner applied
+to the 10 assigned architectures on a TPU v5e pod slice — the simulator
+used the way launch/serve.py uses it (DESIGN.md Sec. 4)."""
+from __future__ import annotations
+
+from repro.core import hardware as hw
+from repro.core import planner
+from repro.configs import ARCHS
+
+from .common import emit
+
+
+def run() -> dict:
+    node = hw.tpu_v5e_pod(16)      # 4x4 v5e slice for planning demo
+    out = {}
+    for arch, cfg in ARCHS.items():
+        try:
+            best = planner.best_plan(node, cfg, batch=8, in_len=2048,
+                                     out_len=256, objective="latency")
+            p = best.plan
+            emit(f"planner/{arch}", best.latency * 1e6,
+                 f"tp={p.tp};pp={p.pp};dp={p.dp};ep={p.ep};"
+                 f"mem_GiB={best.memory_per_device / 2 ** 30:.2f};"
+                 f"tok_s={best.throughput:.0f}")
+            out[arch] = {"tp": p.tp, "pp": p.pp, "dp": p.dp,
+                         "fits": best.fits}
+        except ValueError as e:
+            emit(f"planner/{arch}", 0.0, f"does_not_fit:{e}")
+            out[arch] = {"fits": False}
+    # grok-314B should need heavy model parallelism; small models DP-heavy
+    ok_small = all(out[a]["tp"] <= 4 for a in ("qwen1.5-0.5b", "qwen2-0.5b")
+                   if out[a].get("fits"))
+    out["small_models_dp_heavy"] = ok_small
+    return out
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

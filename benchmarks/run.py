@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) followed by
+a CHECKS summary per benchmark. Exit code 1 if any reproduction claim
+check fails.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig5_operators, fig6_area, table3_compute_designs,
+                   fig8_bandwidth, fig9_buffers, table4_designs,
+                   mapper_speed, planner_archs)
+
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig5_operators", fig5_operators),
+        ("fig6_area", fig6_area),
+        ("table3_compute_designs", table3_compute_designs),
+        ("fig8_bandwidth", fig8_bandwidth),
+        ("fig9_buffers", fig9_buffers),
+        ("table4_designs", table4_designs),
+        ("mapper_speed", mapper_speed),
+        ("planner_archs", planner_archs),
+    ]
+    failed = []
+    all_checks = {}
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        checks = mod.run()
+        dt = time.perf_counter() - t0
+        all_checks[name] = checks
+        bad = [k for k, v in checks.items()
+               if isinstance(v, bool) and not v]
+        status = "PASS" if not bad else f"FAIL({','.join(bad)})"
+        print(f"# {name}: {status}  [{dt:.1f}s]")
+        if bad:
+            failed.append((name, bad))
+    print("#")
+    print("# ==== claim-check summary ====")
+    for name, checks in all_checks.items():
+        for k, v in checks.items():
+            print(f"# {name}.{k} = {v}")
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all reproduction claim checks passed")
+
+
+if __name__ == "__main__":
+    main()

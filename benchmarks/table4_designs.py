@@ -1,0 +1,110 @@
+"""Paper Table IV + Figs. 10-12: the two proposed cost-effective designs.
+
+Claims:
+  C6 latency-oriented (half compute/SRAM, same HBM): ~95.3% of GA100
+     performance, 42.1% smaller die, ~1.06x perf/$ (Fig. 10, 11);
+  C7 throughput-oriented (512GB DDR @1TB/s, 4x systolic, half cores):
+     ~1.42x throughput, ~3.41x perf/$, ~9x worse latency (Fig. 12).
+
+Settings follow the paper: Fig. 10 = batch 16, 4-way TP, 48 GPT-3 layers;
+Fig. 12 = largest batch within memory, 8-way pipeline (12 layers/device).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import area, cost, hardware as hw
+from repro.core import inference_model as im
+from repro.core.graph import Plan
+from repro.configs import get_config
+
+from .common import emit
+
+
+def _half_gpt3(cfg):
+    return replace(cfg, n_layers=48)
+
+
+def _eighth_gpt3(cfg):
+    return replace(cfg, n_layers=12)
+
+
+def run() -> dict:
+    cfg = get_config("gpt3-175b")
+    ga = hw.nvidia_ga100()
+    lat = hw.latency_oriented()
+    thr = hw.throughput_oriented()
+    checks = {}
+
+    # ---- Fig. 10/11: latency-oriented vs GA100 (48 layers, batch 16, TP4)
+    cfg48 = _half_gpt3(cfg)
+    plan = Plan(tp=4)
+    ratios = []
+    for in_len, out_len in ((256, 256), (512, 1024), (1024, 1024),
+                            (2048, 256), (256, 2048), (2048, 2048)):
+        t_ga = im.generate(hw.make_system(ga, 4, 600, "fc"), cfg48, plan,
+                           16, in_len, out_len).latency
+        t_lat = im.generate(hw.make_system(lat, 4, 600, "fc"), cfg48, plan,
+                            16, in_len, out_len).latency
+        ratio = t_ga / t_lat          # normalized performance (>=: better)
+        ratios.append(ratio)
+        emit(f"fig10/in{in_len}_out{out_len}", t_lat * 1e6,
+             f"norm_perf={ratio:.3f}")
+    avg_perf = sum(ratios) / len(ratios)
+    checks["latency_design_norm_perf"] = round(avg_perf, 3)   # paper 0.953
+    checks["latency_perf_ok"] = 0.85 <= avg_perf <= 1.0
+    # worst case should be long-input/short-output (prefill-heavy)
+    checks["worst_is_prefill_heavy"] = min(ratios) == ratios[3]
+
+    # die area + cost
+    a_ga = area.device_area(ga, 600).total_mm2
+    a_lat = area.device_area(lat, 600).total_mm2
+    a_thr = area.device_area(thr, 600).total_mm2
+    c_ga = cost.device_cost(ga, a_ga)
+    c_lat = cost.device_cost(lat, a_lat)
+    c_thr = cost.device_cost(thr, a_thr)
+    emit("table4/area_mm2", 0.0,
+         f"lat={a_lat:.0f};ga={a_ga:.0f};thr={a_thr:.0f};paper=478/826/787")
+    emit("table4/cost_usd", 0.0,
+         f"lat={c_lat.total_usd:.0f};ga={c_ga.total_usd:.0f};"
+         f"thr={c_thr.total_usd:.0f};paper=640/711/296")
+    checks["area_reduction"] = round(1 - a_lat / a_ga, 3)     # paper 0.421
+    perf_cost_lat = avg_perf * c_ga.total_usd / c_lat.total_usd
+    checks["latency_perf_per_cost"] = round(perf_cost_lat, 2)  # paper 1.06
+
+    # ---- Fig. 12: throughput-oriented vs 8-GA100, PP=8, 12 layers each
+    cfg12 = _eighth_gpt3(cfg)
+    plan_pp = Plan(tp=1, pp=8)
+    tps = {}
+    lats = {}
+    for dev, tag in ((ga, "ga100"), (thr, "throughput")):
+        node = hw.make_system(dev, 8, 600, "fc")
+        # largest batch within memory (paper: "largest batch size within
+        # memory capacity"); full GPT-3 = 8 stages x 12 layers
+        full_plan = Plan(tp=1, pp=8)
+        b = im.max_batch(node, cfg, full_plan, 2048 + 2048)
+        b = max(1, min(b, 512))
+        g = im.generate(node, cfg, full_plan, b, 2048, 2048)
+        tp_tok = b * 2048 / g.latency
+        tps[tag] = tp_tok
+        lats[tag] = g.latency / 1.0
+        emit(f"fig12/{tag}", g.latency * 1e6,
+             f"batch={b};tokens_per_s={tp_tok:.0f}")
+    thr_x = tps["throughput"] / tps["ga100"]
+    lat_x = lats["throughput"] / lats["ga100"]
+    checks["throughput_gain_x"] = round(thr_x, 2)            # paper 1.42
+    checks["throughput_latency_x"] = round(lat_x, 2)         # paper 9.21
+    perf_cost_thr = thr_x * c_ga.total_usd / c_thr.total_usd
+    checks["throughput_perf_per_cost"] = round(perf_cost_thr, 2)  # 3.41
+    checks["throughput_ok"] = 1.1 <= thr_x <= 2.2
+    checks["perf_cost_ok"] = 2.0 <= perf_cost_thr <= 5.0
+    emit("table4/claims", 0.0,
+         f"lat_norm_perf={avg_perf:.3f}(paper0.953);"
+         f"lat_perf_cost={perf_cost_lat:.2f}(paper1.06);"
+         f"thr_x={thr_x:.2f}(paper1.42);"
+         f"thr_perf_cost={perf_cost_thr:.2f}(paper3.41)")
+    return checks
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

@@ -1,0 +1,58 @@
+"""Quickstart: the three layers of LLMCompass-JAX in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. LLMCompass simulator (the paper): evaluate a hardware design in ms.
+2. Planner: pick the parallelism plan for an assigned arch on a v5e slice.
+3. JAX runtime: run a real (reduced) model end to end.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hardware as hw
+from repro.core import inference_model as im
+from repro.core import area, cost, planner
+from repro.core.graph import Plan
+from repro.configs import get_config, smoke_config
+from repro import models
+
+# ---------------------------------------------------------------- 1) paper
+print("== 1. LLMCompass: GPT-3 175B on a 4xA100 node (paper Sec. IV) ==")
+node = hw.dgx_a100(4)
+gpt3 = get_config("gpt3-175b")
+pf = im.prefill(node, gpt3, Plan(tp=4), batch=8, seq=2048)
+dc = im.decode_step(node, gpt3, Plan(tp=4), batch=8, kv_len=3072)
+print(f"prefill (b8, s2048): {pf.latency:.3f} s   dominant={pf.dominant}")
+print(f"decode  /token     : {dc.latency * 1e3:.1f} ms  dominant={dc.dominant}")
+
+a100 = hw.nvidia_a100()
+rep = area.device_area(a100, 600)
+c = cost.device_cost(a100, rep.total_mm2)
+print(f"A100 die: {rep.total_mm2:.0f} mm^2, device cost ~${c.total_usd:.0f}")
+
+# -------------------------------------------------------------- 2) planner
+print("\n== 2. Planner: qwen3-1.7b on 16x TPU v5e ==")
+v5e = hw.tpu_v5e_pod(16)
+best = planner.best_plan(v5e, get_config("qwen3-1.7b"), batch=8,
+                         in_len=2048, out_len=256)
+print(f"best plan: tp={best.plan.tp} pp={best.plan.pp} dp={best.plan.dp}  "
+      f"latency={best.latency * 1e3:.0f} ms  "
+      f"throughput={best.throughput:.0f} tok/s")
+
+# -------------------------------------------------------------- 3) runtime
+print("\n== 3. JAX runtime: reduced qwen3, forward + generate ==")
+cfg = smoke_config(get_config("qwen3-1.7b"))
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+tokens = jnp.array([[1, 2, 3, 4, 5]])
+cache = models.init_cache(cfg, 1, 64)
+logits, cache = models.prefill(cfg, params, tokens, cache)
+out = [int(jnp.argmax(logits[0]))]
+for _ in range(7):
+    logits, cache = models.decode_step(cfg, params,
+                                       jnp.asarray([out[-1]]), cache)
+    out.append(int(jnp.argmax(logits[0])))
+print(f"prompt {tokens.tolist()[0]} -> generated {out}")
+print("done.")

@@ -1,0 +1,47 @@
+"""Offline batched serving with continuous batching — end-to-end driver.
+
+    PYTHONPATH=src python examples/serve_offline.py [--arch recurrentgemma-2b]
+
+Serves a reduced config of the chosen architecture with the production
+engine (prefill waves + per-slot decode + refill), printing throughput.
+"""
+import argparse
+import sys
+import time
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro import models
+from repro.serving import Engine, Request, SamplingParams
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_size=args.batch, max_len=128)
+    reqs = [Request(uid=i,
+                    prompt=[(3 * i + j) % cfg.vocab_size
+                            for j in range(4 + (i % 5))],
+                    max_new_tokens=args.max_new,
+                    sampling=SamplingParams(temperature=0.7, top_k=20))
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    for r in done[:3]:
+        print(f"req {r.uid}: {len(r.prompt)} prompt -> {r.output}")
+    print(f"{len(done)} requests, {eng.stats['tokens_out']} new tokens, "
+          f"{dt:.2f}s wall, {eng.stats['tokens_out'] / dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: LLMCompass-JAX — hardware evaluation framework for LLM inference
++ a multi-pod JAX training/serving stack planned by it. See DESIGN.md."""
+__version__ = "1.0.0"

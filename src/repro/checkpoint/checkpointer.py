@@ -1,0 +1,133 @@
+"""Chunked, manifest-driven checkpointing (tensorstore-free).
+
+Layout:  <dir>/step_<N>/
+             manifest.json      {step, leaf paths, shapes, dtypes, data step}
+             shard_<i>.npz      leaf arrays (host-local shard in multi-host)
+
+Guarantees:
+  * atomic commit — written to step_<N>.tmp, fsynced, renamed;
+  * async mode — the array->host copy happens on the caller thread, the
+    file write on a background thread (training continues);
+  * elastic restore — arrays are re-sharded onto whatever mesh the restore
+    call runs under (jax.device_put with the new sharding), so a restart on
+    a smaller/larger healthy slice works (fault_tolerance.remesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return flat, treedef
+
+
+def _path_key(path) -> str:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(out)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             async_: bool = False):
+        flat, _ = _flatten(tree)
+        host = {}
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        for path, leaf in flat:
+            key = _path_key(path)
+            arr = np.asarray(leaf)
+            host[key] = arr
+            manifest["leaves"].append(
+                {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "shard_0.npz"),
+                     **{k.replace("/", "__"): v for k, v in host.items()})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """template: pytree with the target structure (values ignored).
+        shardings: optional matching pytree of NamedSharding for re-shard."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "shard_0.npz"))
+        dtypes = {le["key"]: le["dtype"] for le in manifest["leaves"]}
+        flat, treedef = _flatten(template)
+        leaves = []
+        for path, leaf in flat:
+            key = _path_key(path).replace("/", "__")
+            arr = data[key]
+            want = dtypes.get(_path_key(path))
+            if want and arr.dtype.kind == "V":
+                # npz stores ml_dtypes (bfloat16) as raw void: reinterpret
+                arr = arr.view(np.dtype(want))
+            leaves.append(arr)
+        if shardings is not None:
+            sflat = jax.tree.leaves(shardings)
+            leaves = [jax.device_put(a, s) for a, s in zip(leaves, sflat)]
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+        return tree, manifest
+
+    def _gc(self):
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        names = sorted(
+            (int(n.split("_")[1]) for n in os.listdir(self.dir)
+             if n.startswith("step_") and not n.endswith(".tmp")))
+        for s in names[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

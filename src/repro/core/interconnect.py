@@ -1,0 +1,86 @@
+"""Communication-primitive models (paper Sec. III-B2).
+
+Link model (AHEAD / LogGP):   T = L + O + n_hat / B
+with framing                  n_hat = ceil(n / MaxPayload) * Flit + n
+
+On top: ring all-reduce (bandwidth-optimal, the paper's choice), plus
+all-gather / reduce-scatter / all-to-all / p2p — the paper models only
+all-reduce and p2p because Megatron-style TP needs nothing else; we add the
+rest because sequence-parallel TP (RS+AG) and MoE expert-parallel (A2A)
+plans need them. All reuse the same link equation.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .hardware import Link, System
+from .operators import OpResult
+
+
+def link_time(link: Link, n_bytes: float) -> float:
+    """Eq. 1-2: time to move n bytes across one link."""
+    if n_bytes <= 0:
+        return 0.0
+    n_hat = math.ceil(n_bytes / link.max_payload_bytes) * link.flit_bytes + n_bytes
+    return link.latency_s + link.overhead_s + n_hat / link.bandwidth_bytes
+
+
+def p2p(system: System, n_bytes: float, name: str = "p2p") -> OpResult:
+    t = link_time(system.link, n_bytes)
+    return OpResult(name, t, 0.0, 0.0, "link")
+
+
+def all_reduce(system: System, n_bytes: float, n_devices: int | None = None,
+               name: str = "all_reduce") -> OpResult:
+    """Ring all-reduce: 2(n-1) steps of n_bytes/n chunks (reduce-scatter then
+    all-gather phase). Reduction adds vector work, usually negligible."""
+    n = n_devices or system.device_count
+    if n <= 1:
+        return OpResult(name, 0.0, 0.0, 0.0, "link")
+    chunk = n_bytes / n
+    t = 2 * (n - 1) * link_time(system.link, chunk)
+    red_flops = (n - 1) * chunk / 2        # adds on 2-byte elements
+    t += red_flops / system.device.peak_vector_flops
+    return OpResult(name, t, red_flops, 2 * (n - 1) * chunk, "link")
+
+
+def reduce_scatter(system: System, n_bytes: float,
+                   n_devices: int | None = None,
+                   name: str = "reduce_scatter") -> OpResult:
+    n = n_devices or system.device_count
+    if n <= 1:
+        return OpResult(name, 0.0, 0.0, 0.0, "link")
+    chunk = n_bytes / n
+    t = (n - 1) * link_time(system.link, chunk)
+    return OpResult(name, t, 0.0, (n - 1) * chunk, "link")
+
+
+def all_gather(system: System, n_bytes: float, n_devices: int | None = None,
+               name: str = "all_gather") -> OpResult:
+    """n_bytes = full gathered size."""
+    n = n_devices or system.device_count
+    if n <= 1:
+        return OpResult(name, 0.0, 0.0, 0.0, "link")
+    chunk = n_bytes / n
+    t = (n - 1) * link_time(system.link, chunk)
+    return OpResult(name, t, 0.0, (n - 1) * chunk, "link")
+
+
+def all_to_all(system: System, n_bytes: float, n_devices: int | None = None,
+               name: str = "all_to_all") -> OpResult:
+    """Each device exchanges n_bytes/n with every peer. On a ring this is
+    (n-1) steps with average hop distance n/4 worth of occupancy; on
+    fully-connected, one step of the largest message per link."""
+    n = n_devices or system.device_count
+    if n <= 1:
+        return OpResult(name, 0.0, 0.0, 0.0, "link")
+    per_pair = n_bytes / n
+    if system.topology == "fc":
+        # dedicated pairwise links: serialize (n-1) sends on the NIC port
+        t = link_time(system.link, per_pair) \
+            + (n - 2) * per_pair / system.link.bandwidth_bytes
+    else:
+        # ring/torus: bisection-limited; total relayed bytes per link ~ n/4 x
+        t = link_time(system.link, per_pair * n / 4) * 2
+    return OpResult(name, t, 0.0, per_pair * (n - 1), "link")

@@ -1,0 +1,234 @@
+"""Mapper: performance-optimal tiling + scheduling search (paper Sec. III-B1).
+
+Simulates C[M,N] = A[M,K] @ B[K,N] (+C) on the hardware template, recursively:
+
+  level 2: main memory -> global buffer      (tiles Tm x Tk x Tn)
+  level 1: global buffer -> cores            (subtiles Sm x Sk x Sn, wave
+           schedule over cores; scheme 1 = cores own distinct C subtiles with
+           merged A/B reads; scheme 2 = cores split K of one C subtile and
+           reduce)
+  level 0: local buffer -> lanes -> systolic array (closed-form SCALE-Sim
+           cycles, see systolic.py)
+
+Double buffering (software pipeline) is a search option at levels 2 and 1: it
+overlaps load with compute (latency = max instead of sum) but halves the
+usable buffer capacity (paper: "the maximal tile size will be reduced").
+
+The search is *vectorized*: every (tile, subtile, scheme, pipeline) candidate
+is evaluated in one numpy broadcast instead of the paper's per-candidate
+Python loop. Same search space, orders of magnitude faster (measured in
+benchmarks/mapper_speed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .hardware import Device
+from .systolic import gemm_cycles_array
+
+
+@dataclass(frozen=True)
+class Mapping:
+    """Best mapping found by the search — also the Pallas BlockSpec hint."""
+    tile_m: int
+    tile_k: int
+    tile_n: int
+    subtile_m: int
+    subtile_k: int
+    subtile_n: int
+    scheme: int                  # 1: output-parallel, 2: k-split + reduce
+    double_buffer_l2: bool
+    double_buffer_l1: bool
+    compute_time: float
+    memory_time: float
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_time >= self.memory_time else "memory"
+
+
+@dataclass(frozen=True)
+class MatmulResult:
+    latency: float               # seconds, excluding kernel launch overhead
+    flops: int
+    main_memory_bytes: int
+    mapping: Mapping
+    candidates_searched: int
+
+
+def _tile_candidates(dim: int, align: int, max_tiles: int = 12) -> np.ndarray:
+    """Power-of-two-ish candidate tile sizes for one dimension."""
+    cands = {dim}
+    t = align
+    while t < dim:
+        cands.add(t)
+        t *= 2
+    # multiples of align near dim for better edge packing
+    if dim > align:
+        cands.add((dim + align - 1) // align * align)
+    out = np.array(sorted(c for c in cands if c > 0), dtype=np.int64)
+    if len(out) > max_tiles:           # keep the largest (most reuse) ones
+        out = out[-max_tiles:]
+    return out
+
+
+@functools.lru_cache(maxsize=1 << 16)
+def matmul_perf(device: Device, m: int, k: int, n: int,
+                batch: int = 1, bytes_in: int = 2, bytes_out: int = 2,
+                b_shared: bool = False) -> MatmulResult:
+    """Search the mapping space and return the best predicted latency.
+
+    batch: independent GEMM instances (e.g. B*H for attention score GEMMs).
+      The batch dimension folds into M for scheduling (subtiles never span
+      batch elements) and multiplies B-operand traffic unless b_shared.
+    b_shared: all batch elements share one B operand (weight matmul with the
+      activation batch folded into M should instead pass batch=1, m=B*M).
+    """
+    dev = device
+    sa = dev.core.lane.systolic_array
+    lanes = dev.core.lanes
+    freq = dev.frequency_hz
+
+    # ---------------- candidate axes ----------------
+    tm = _tile_candidates(m, min(sa.rows, m))
+    tk = _tile_candidates(k, min(128, k))
+    tn = _tile_candidates(n, min(sa.cols, n))
+    sm = _tile_candidates(m, min(sa.rows, m))
+    sk = _tile_candidates(k, min(64, k))
+    sn = _tile_candidates(n, min(sa.cols, n))
+
+    # level-2 tile grid  [i2]
+    TM, TK, TN = np.meshgrid(tm, tk, tn, indexing="ij")
+    TM, TK, TN = TM.ravel(), TK.ravel(), TN.ravel()
+    # level-1 subtile grid  [i1]
+    SM, SK, SN = np.meshgrid(sm, sk, sn, indexing="ij")
+    SM, SK, SN = SM.ravel(), SK.ravel(), SN.ravel()
+
+    # pipeline options: (db2, db1) in {0,1}^2  [p]
+    DB = np.array([(0, 0), (0, 1), (1, 0), (1, 1)], dtype=np.int64)
+
+    # broadcast to [i2, i1, p]
+    TM_, TK_, TN_ = (x[:, None, None] for x in (TM, TK, TN))
+    SM_, SK_, SN_ = (x[None, :, None] for x in (SM, SK, SN))
+    DB2 = DB[None, None, :, 0]
+    DB1 = DB[None, None, :, 1]
+
+    # ---------------- validity masks ----------------
+    gb_need = (TM_ * TK_ + TK_ * TN_ + TM_ * TN_) * bytes_in * (1 + DB2)
+    lb_need = (SM_ * SK_ + SK_ * SN_ + SM_ * SN_) * bytes_in * (1 + DB1)
+    valid = (gb_need <= dev.global_buffer_bytes) \
+        & (lb_need <= dev.core.local_buffer_bytes) \
+        & (SM_ <= TM_) & (SK_ <= TK_) & (SN_ <= TN_)
+    if batch > 1:
+        # subtiles/tiles must not span batch elements
+        valid = valid & (SM_ <= m) & (TM_ <= m)
+
+    # ---------------- level 0: core compute time for one subtile ----------
+    # subtile split across lanes on the N dimension
+    sn_lane = -(-SN_ // lanes)           # ceil
+    lane_cyc = gemm_cycles_array(SM_, SK_, sn_lane, sa.rows, sa.cols)
+    subtile_cyc = lane_cyc               # lanes run in parallel
+
+    # ---------------- level 1: schedule subtiles across cores -------------
+    n_sub_m = -(-TM_ // SM_)
+    n_sub_n = -(-TN_ // SN_)
+    n_sub_k = -(-TK_ // SK_)
+    cores = dev.core_count
+    gb_bw_cyc = dev.global_buffer_bw_per_cycle
+
+    # -- scheme 1: distinct C subtiles per core, k-loop inside core --------
+    out_subtiles = n_sub_m * n_sub_n
+    waves = -(-out_subtiles // cores)
+    # per wave, ~w cores arranged over (gm x gn) subtile grid; unique A/B
+    # panel reads are merged (paper: "memory access merging ... automatically
+    # identified"). Use the balanced arrangement gm = min(n_sub_m, sqrt(w)).
+    w = np.minimum(out_subtiles, cores)
+    gm = np.minimum(n_sub_m, np.maximum(1, np.round(np.sqrt(w))).astype(np.int64))
+    gn = np.minimum(n_sub_n, np.maximum(1, -(-w // gm)))
+    # traffic per wave (bytes through the global buffer port):
+    wave_traffic = (gm * SM_ * TK_ + gn * TK_ * SN_) * bytes_in \
+        + gm * gn * SM_ * SN_ * bytes_out
+    wave_mem_cyc = -(-wave_traffic // gb_bw_cyc)
+    wave_cmp_cyc = n_sub_k * subtile_cyc
+    s1_cyc = np.where(DB1 == 1,
+                      waves * np.maximum(wave_mem_cyc, wave_cmp_cyc)
+                      + np.minimum(wave_mem_cyc, wave_cmp_cyc),
+                      waves * (wave_mem_cyc + wave_cmp_cyc))
+
+    # -- scheme 2: split K of each C subtile across spare cores ------------
+    ck = np.maximum(1, np.minimum(cores // np.maximum(out_subtiles, 1), n_sub_k))
+    k_per_core = -(-n_sub_k // ck)
+    s2_cmp_cyc = k_per_core * subtile_cyc
+    # reduction: partials written + read through GB, summed on vector units
+    vec_tp = dev.core.lanes * dev.core.lane.vector_unit.width
+    red_traffic = (2 * (ck - 1)) * SM_ * SN_ * bytes_out
+    red_cyc = -(-red_traffic // gb_bw_cyc) + \
+        -(-((ck - 1) * SM_ * SN_) // np.maximum(vec_tp * cores, 1))
+    s2_waves = -(-(out_subtiles * ck) // cores)
+    s2_traffic = (SM_ * TK_ + TK_ * SN_) * bytes_in      # per subtile group
+    s2_mem_cyc = -(-(s2_traffic * out_subtiles // np.maximum(s2_waves, 1)) // gb_bw_cyc)
+    s2_cyc = np.where(DB1 == 1,
+                      s2_waves * np.maximum(s2_mem_cyc, s2_cmp_cyc),
+                      s2_waves * (s2_mem_cyc + s2_cmp_cyc)) + red_cyc
+
+    use_s2 = s2_cyc < s1_cyc
+    tile_cyc = np.where(use_s2, s2_cyc, s1_cyc)
+    tile_time = tile_cyc / freq
+
+    # ---------------- level 2: main memory <-> global buffer --------------
+    n_t_m = -(-m // np.minimum(TM_, m))
+    n_t_n = -(-n // np.minimum(TN_, n))
+    n_t_k = -(-k // np.minimum(TK_, k))
+    steps = batch * n_t_m * n_t_n * n_t_k
+    # IO per step: A tile + B tile; C written once per (m,n) tile
+    a_bytes_step = TM_ * TK_ * bytes_in
+    b_bytes_step = TK_ * TN_ * bytes_in
+    c_bytes_tile = TM_ * TN_ * bytes_out
+    mem_bw = dev.memory_bandwidth
+    step_mem_t = (a_bytes_step + b_bytes_step) / mem_bw
+    c_mem_t = c_bytes_tile / mem_bw
+    if b_shared and batch > 1:
+        # B re-read only once per k-sweep regardless of batch
+        step_mem_t = (a_bytes_step + b_bytes_step / batch) / mem_bw
+
+    step_t = np.where(DB2 == 1,
+                      np.maximum(step_mem_t, tile_time),
+                      step_mem_t + tile_time)
+    total_t = steps * step_t + batch * n_t_m * n_t_n * c_mem_t \
+        + np.where(DB2 == 1, np.minimum(step_mem_t, tile_time), 0.0)
+
+    total_t = np.where(valid, total_t, np.inf)
+
+    # ---------------- pick the winner ----------------
+    flat = int(np.argmin(total_t))
+    i2, i1, p = np.unravel_index(flat, total_t.shape)
+    best_t = float(total_t[i2, i1, p])
+    if not np.isfinite(best_t):
+        raise ValueError(
+            f"no valid mapping for matmul {m}x{k}x{n} on {dev.name} "
+            f"(buffers too small?)")
+
+    flops = 2 * batch * m * k * n
+    # actual main-memory traffic of the chosen mapping
+    mm_bytes = int(batch * (n_t_m * n_t_n * n_t_k)[i2, 0, 0]
+                   * (TM[i2] * TK[i2] + TK[i2] * TN[i2]) * bytes_in
+                   + batch * (n_t_m * n_t_n)[i2, 0, 0] * TM[i2] * TN[i2] * bytes_out)
+
+    mapping = Mapping(
+        tile_m=int(TM[i2]), tile_k=int(TK[i2]), tile_n=int(TN[i2]),
+        subtile_m=int(SM[i1]), subtile_k=int(SK[i1]), subtile_n=int(SN[i1]),
+        scheme=2 if bool(use_s2[i2, i1, p]) else 1,
+        double_buffer_l2=bool(DB2[0, 0, p]), double_buffer_l1=bool(DB1[0, 0, p]),
+        compute_time=float((steps * tile_time)[i2, i1, p]),
+        memory_time=float((steps * step_mem_t)[i2, 0, 0]
+                          + (batch * n_t_m * n_t_n * c_mem_t)[i2, 0, 0]),
+    )
+    n_cand = int(total_t.size)
+    return MatmulResult(latency=best_t, flops=flops,
+                        main_memory_bytes=mm_bytes, mapping=mapping,
+                        candidates_searched=n_cand)

@@ -1,0 +1,188 @@
+"""Operator-level performance models (paper Sec. III-B1/B3).
+
+Matmul delegates to the mapper search. Softmax / LayerNorm / GELU follow the
+same tile-by-tile methodology minus the systolic array: fewer dimensions, no
+MXU, vector-unit compute, special-function throughput for exp/tanh/rsqrt.
+Softmax uses the online algorithm [Milakov & Gimelshein], GELU the tanh
+approximation [Hendrycks & Gimpel] — as in the paper.
+
+Every model returns an OpResult carrying latency, flops, bytes and the
+binding resource, so graph-level accounting (and the roofline comparison)
+stays interpretable — the paper's "no fudge factors" principle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .hardware import Device
+from .mapper import Mapping, MatmulResult, matmul_perf
+
+
+@dataclass(frozen=True)
+class OpResult:
+    name: str
+    latency: float                  # seconds, incl. launch overhead
+    flops: float
+    main_memory_bytes: float
+    bound: str                      # compute | memory | overhead | link
+    mapping: Optional[Mapping] = None
+
+    def __add__(self, other: "OpResult") -> "OpResult":
+        return OpResult(
+            name=f"{self.name}+{other.name}",
+            latency=self.latency + other.latency,
+            flops=self.flops + other.flops,
+            main_memory_bytes=self.main_memory_bytes + other.main_memory_bytes,
+            bound=self.bound if self.latency >= other.latency else other.bound,
+        )
+
+
+ZERO = OpResult("zero", 0.0, 0, 0, "overhead")
+
+
+def _finish(name: str, dev: Device, compute_t: float, mem_t: float,
+            flops: float, bytes_: float, mapping=None) -> OpResult:
+    body = max(compute_t, mem_t)   # vector ops pipeline load with compute
+    lat = body + dev.kernel_launch_overhead_s
+    if dev.kernel_launch_overhead_s > body:
+        bound = "overhead"
+    elif compute_t >= mem_t:
+        bound = "compute"
+    else:
+        bound = "memory"
+    return OpResult(name, lat, flops, bytes_, bound, mapping)
+
+
+def matmul(dev: Device, m: int, k: int, n: int, batch: int = 1,
+           bytes_in: int = 2, bytes_out: int = 2,
+           b_shared: bool = False, name: str = "matmul") -> OpResult:
+    r = matmul_perf(dev, m, k, n, batch=batch, bytes_in=bytes_in,
+                    bytes_out=bytes_out, b_shared=b_shared)
+    return OpResult(name, r.latency + dev.kernel_launch_overhead_s, r.flops,
+                    r.main_memory_bytes, r.mapping.bound, r.mapping)
+
+
+def _vector_time(dev: Device, flops: float, special_frac: float = 0.0) -> float:
+    """Time for elementwise/reduction work on the vector units.
+
+    special_frac: fraction of operations that are special functions
+    (exp/tanh/rsqrt), which run at VectorUnit.special_ratio of peak.
+    """
+    peak = dev.peak_vector_flops
+    sp = dev.core.lane.vector_unit.special_ratio
+    return flops * ((1 - special_frac) + special_frac / sp) / peak
+
+
+def _row_parallel_util(dev: Device, rows: int) -> float:
+    """Row-parallel ops (softmax/norms) assign rows to cores: with fewer
+    rows than cores, the idle cores cannot help — the paper's Fig. 5d trend
+    (throughput drops at extreme reduction dims) comes from exactly this."""
+    return min(1.0, rows / dev.core_count)
+
+
+def softmax(dev: Device, rows: int, cols: int, bytes_in: int = 2,
+            bytes_out: int = 2, name: str = "softmax") -> OpResult:
+    """Row-wise softmax on (rows, cols), online algorithm (one read pass for
+    running max+sum, one read+write pass to normalize). If a row's working set
+    exceeds the global buffer, the second pass re-reads from main memory."""
+    n = rows * cols
+    row_bytes = cols * bytes_in
+    fits = rows * row_bytes <= dev.global_buffer_bytes
+    reads = 1 if fits else 2
+    bytes_ = n * (reads * bytes_in + bytes_out)
+    mem_t = bytes_ / dev.memory_bandwidth
+    # per element: 1 exp + ~3 flops (max, scale-accum, divide amortized)
+    flops = 4.0 * n
+    cmp_t = _vector_time(dev, flops, special_frac=0.25) \
+        / _row_parallel_util(dev, rows)
+    return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
+
+
+def layernorm(dev: Device, rows: int, cols: int, bytes_in: int = 2,
+              bytes_out: int = 2, name: str = "layernorm") -> OpResult:
+    """Welford-style mean/var + normalize; reduction cost grows with cols.
+
+    When one row exceeds the per-core local buffer, partial stats make extra
+    trips through the global buffer — this is what makes throughput *drop* at
+    extreme reduction dims (paper Fig. 5d) where a roofline model stays flat.
+    """
+    n = rows * cols
+    bytes_ = n * (bytes_in + bytes_out)
+    mem_t = bytes_ / dev.memory_bandwidth
+    flops = 8.0 * n   # mean/var accumulation + (x-mu)*rsqrt(var)*g + b
+    cmp_t = _vector_time(dev, flops, special_frac=0.05) \
+        / _row_parallel_util(dev, rows)
+    # cross-tile reduction penalty: rows are strip-mined into col-chunks that
+    # fit a core's local buffer; partial (mean, M2) pairs traverse the GB
+    chunk = max(1, dev.core.local_buffer_bytes // (2 * bytes_in))
+    n_chunks = -(-cols // chunk)
+    if n_chunks > 1:
+        part_bytes = rows * n_chunks * 8 * 2     # fp32 (mean, M2) per chunk
+        mem_t += 2 * part_bytes / dev.global_buffer_bandwidth
+        cmp_t += _vector_time(dev, rows * n_chunks * 8.0) \
+            / _row_parallel_util(dev, rows)
+    return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
+
+
+def rmsnorm(dev: Device, rows: int, cols: int, **kw) -> OpResult:
+    r = layernorm(dev, rows, cols, **kw)
+    return OpResult(kw.get("name", "rmsnorm"), r.latency * 0.85, r.flops * 0.6,
+                    r.main_memory_bytes, r.bound)
+
+
+def gelu(dev: Device, n_elements: int, bytes_in: int = 2,
+         bytes_out: int = 2, name: str = "gelu") -> OpResult:
+    """tanh-approximated GELU: ~10 flops/element, half special."""
+    bytes_ = n_elements * (bytes_in + bytes_out)
+    mem_t = bytes_ / dev.memory_bandwidth
+    flops = 10.0 * n_elements
+    cmp_t = _vector_time(dev, flops, special_frac=0.5)
+    return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
+
+
+def silu_mul(dev: Device, n_elements: int, bytes_in: int = 2,
+             bytes_out: int = 2, name: str = "silu_mul") -> OpResult:
+    """SwiGLU gate: silu(a) * b — reads two operands."""
+    bytes_ = n_elements * (2 * bytes_in + bytes_out)
+    mem_t = bytes_ / dev.memory_bandwidth
+    flops = 6.0 * n_elements
+    cmp_t = _vector_time(dev, flops, special_frac=0.4)
+    return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
+
+
+def elementwise(dev: Device, n_elements: int, flops_per_elt: float = 1.0,
+                n_in: int = 1, bytes_elt: int = 2,
+                name: str = "elementwise") -> OpResult:
+    bytes_ = n_elements * (n_in + 1) * bytes_elt
+    mem_t = bytes_ / dev.memory_bandwidth
+    flops = flops_per_elt * n_elements
+    cmp_t = _vector_time(dev, flops)
+    return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
+
+
+def memory_traffic(dev: Device, bytes_: float, name: str = "io") -> OpResult:
+    """Pure data movement (e.g. KV-cache append, embedding gather)."""
+    mem_t = bytes_ / dev.memory_bandwidth
+    return _finish(name, dev, 0.0, mem_t, 0.0, bytes_)
+
+
+def recurrent_scan(dev: Device, seq: int, batch: int, d_state: float,
+                   flops_per_step: float, bytes_io: float,
+                   chunk: int = 128, name: str = "scan") -> OpResult:
+    """Linear-recurrence scan (RWKV6 WKV / RG-LRU) — paper-model extension.
+
+    Modeled as a chunked scan: inside a chunk the state stays in the local
+    buffer (vector compute); between chunks the carry is tiny. IO = stream the
+    inputs/outputs once. Not in the paper's operator set (it models dense
+    transformer ops); flagged in DESIGN.md Sec. 5.
+    """
+    mem_t = bytes_io / dev.memory_bandwidth
+    cmp_t = _vector_time(dev, flops_per_step * seq * batch, special_frac=0.2)
+    # sequential dependency floor: chunks pipeline across batch*heads, but a
+    # single (batch, head) chain is seq/chunk sequential carries deep
+    chain = (seq / chunk) * (d_state / max(dev.core.lane.vector_unit.width, 1)
+                             ) / dev.frequency_hz
+    cmp_t = max(cmp_t, chain)
+    return _finish(name, dev, cmp_t, mem_t, flops_per_step * seq * batch,
+                   bytes_io)

@@ -1,0 +1,75 @@
+"""Parallelism planner — the paper's model used the way Sec. IV/V uses it:
+enumerate plans, keep the ones that fit memory, rank by predicted latency or
+throughput. launch/serve.py and launch/train.py call this to pick TP/PP/DP.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import List, Optional
+
+from ..configs.base import ModelConfig
+from .hardware import System
+from .graph import Plan
+from . import inference_model as im
+
+
+@dataclass(frozen=True)
+class RankedPlan:
+    plan: Plan
+    latency: float          # generate latency for the probe workload
+    throughput: float       # tokens/s
+    memory_per_device: float
+    fits: bool
+
+
+def _divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def enumerate_plans(system: System, cfg: ModelConfig,
+                    max_tp: Optional[int] = None) -> List[Plan]:
+    n = system.device_count
+    plans = []
+    for tp in _divisors(n):
+        if max_tp and tp > max_tp:
+            continue
+        if cfg.n_heads and cfg.n_kv_heads and tp > cfg.n_kv_heads * cfg.group_size:
+            continue
+        for pp in _divisors(n // tp):
+            dp = n // (tp * pp)
+            ep = 1
+            if cfg.n_experts:
+                ep = math.gcd(cfg.n_experts, dp) or 1
+            plans.append(Plan(tp=tp, pp=pp, dp=dp, ep=ep))
+    return plans
+
+
+def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
+               out_len: int, objective: str = "latency",
+               max_tp: Optional[int] = None) -> List[RankedPlan]:
+    out = []
+    for plan in enumerate_plans(system, cfg, max_tp=max_tp):
+        b_local = max(1, batch // plan.dp)
+        mem = im.memory_per_device(cfg, plan, b_local, in_len + out_len)
+        fits = mem <= system.device.memory_capacity
+        if not fits:
+            out.append(RankedPlan(plan, math.inf, 0.0, mem, False))
+            continue
+        g = im.generate(system, cfg, plan, b_local, in_len, out_len)
+        tp_ = im.throughput(system, cfg, plan, b_local, in_len, out_len)
+        out.append(RankedPlan(plan, g.latency, tp_, mem, True))
+    key = (lambda r: r.latency) if objective == "latency" \
+        else (lambda r: -r.throughput)
+    return sorted(out, key=key)
+
+
+def best_plan(system: System, cfg: ModelConfig, batch: int, in_len: int,
+              out_len: int, objective: str = "latency") -> RankedPlan:
+    ranked = rank_plans(system, cfg, batch, in_len, out_len, objective)
+    fitting = [r for r in ranked if r.fits]
+    if not fitting:
+        raise ValueError(
+            f"{cfg.name} does not fit on {system.device_count}x"
+            f"{system.device.name} under any plan")
+    return fitting[0]

@@ -1,0 +1,63 @@
+"""Naive roofline baseline (paper Table V: fast but over-optimistic).
+
+Used two ways:
+  * as the lower-bound sanity check for the tile-level model (property test:
+    mapper latency >= roofline latency, always);
+  * in the dry-run analyzer, where the three-term roofline (compute, memory,
+    collective) is derived from compiled-HLO statistics — see
+    launch/analysis.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .hardware import Device, System
+
+
+@dataclass(frozen=True)
+class RooflinePoint:
+    compute_s: float
+    memory_s: float
+    collective_s: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+def matmul_roofline(dev: Device, m: int, k: int, n: int, batch: int = 1,
+                    bytes_elt: int = 2) -> RooflinePoint:
+    flops = 2.0 * batch * m * k * n
+    bytes_ = batch * (m * k + k * n + m * n) * bytes_elt
+    return RooflinePoint(flops / dev.peak_matmul_flops,
+                         bytes_ / dev.memory_bandwidth)
+
+
+def op_roofline(dev: Device, flops: float, bytes_: float,
+                on_mxu: bool = False) -> RooflinePoint:
+    peak = dev.peak_matmul_flops if on_mxu else dev.peak_vector_flops
+    return RooflinePoint(flops / peak, bytes_ / dev.memory_bandwidth)
+
+
+# --- TPU v5e constants used by the dry-run three-term roofline -------------
+TPU_V5E_PEAK_BF16 = 197e12          # FLOP/s per chip
+TPU_V5E_HBM_BW = 819e9              # bytes/s per chip
+TPU_V5E_ICI_BW = 50e9               # bytes/s per link (per direction)
+TPU_V5E_ICI_LINKS = 4               # 2D torus: +/-x, +/-y
+
+
+def three_term(flops_per_chip: float, hbm_bytes_per_chip: float,
+               collective_bytes_per_chip: float,
+               peak=TPU_V5E_PEAK_BF16, hbm=TPU_V5E_HBM_BW,
+               ici=TPU_V5E_ICI_BW) -> RooflinePoint:
+    return RooflinePoint(
+        compute_s=flops_per_chip / peak,
+        memory_s=hbm_bytes_per_chip / hbm,
+        collective_s=collective_bytes_per_chip / ici,
+    )

@@ -1,0 +1,10 @@
+from . import sharding, fault_tolerance, pipeline
+from .sharding import (param_shardings, opt_state_shardings, data_shardings,
+                       cache_shardings, param_spec, batch_spec)
+from .fault_tolerance import (RestartManifest, remesh, StepMonitor,
+                              FailureInjector)
+
+__all__ = ["sharding", "fault_tolerance", "pipeline", "param_shardings",
+           "opt_state_shardings", "data_shardings", "cache_shardings",
+           "param_spec", "batch_spec", "RestartManifest", "remesh",
+           "StepMonitor", "FailureInjector"]

@@ -1,0 +1,74 @@
+"""Pipeline parallelism over the `pod` axis (GPipe schedule via shard_map).
+
+The stacked-units parameter layout (models/lm.py) makes PP natural: the
+unit axis shards across `pod` — each pod holds n_units/P consecutive units
+— and activations travel pod->pod with collective_permute. The microbatch
+loop keeps all stages busy after the fill phase (paper Sec. II-C:
+"pipeline parallelism ... increasing throughput at the expense of
+latency").
+
+This is the optional PP path (launch/train.py --pp); the default dry-run
+plan uses the pod axis for data parallelism (DESIGN.md Sec. 6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(mesh: Mesh, stage_fn: Callable, params_stacked, x,
+                   n_microbatches: int):
+    """Run x through all pipeline stages.
+
+    stage_fn(stage_params, x) -> x  applies this pod's units.
+    params_stacked: pytree with leading unit axis, sharded P("pod", ...).
+    x: (B, ...) activations, B % n_microbatches == 0.
+    """
+    n_stages = mesh.shape["pod"]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P("pod"), P(None)),
+        out_specs=P(None),
+        check_rep=False)
+    def run(local_params, x_full):
+        stage = lax.axis_index("pod")
+        B = x_full.shape[0]
+        mb = B // n_microbatches
+        xs = x_full.reshape(n_microbatches, mb, *x_full.shape[1:])
+        n_ticks = n_microbatches + n_stages - 1
+        out = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, out = carry            # buf: activation entering this stage
+            mb_idx = t - stage
+            active = (mb_idx >= 0) & (mb_idx < n_microbatches)
+            # stage 0 feeds from the input stream
+            inject = xs[jnp.clip(mb_idx, 0, n_microbatches - 1)]
+            cur = jnp.where(stage == 0, inject, buf)
+            y = stage_fn(local_params, cur)
+            y = jnp.where(active, y, buf)
+            # last stage writes the result
+            out = jnp.where(
+                (stage == n_stages - 1) & active,
+                out.at[jnp.clip(mb_idx, 0, n_microbatches - 1)].set(y), out)
+            # pass activations to the next stage
+            nxt = lax.ppermute(y, "pod",
+                               [(i, (i + 1) % n_stages)
+                                for i in range(n_stages)])
+            return (nxt, out), None
+
+        buf0 = jnp.zeros(xs.shape[1:], xs.dtype)
+        (buf, out), _ = lax.scan(tick, (buf0, out), jnp.arange(n_ticks))
+        # only the last stage holds real outputs; broadcast via psum over pod
+        out = jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out))
+        out = lax.psum(out, "pod")
+        return out.reshape(B, *x_full.shape[1:])
+
+    return run(params_stacked, x)

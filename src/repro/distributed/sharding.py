@@ -1,0 +1,269 @@
+"""Sharding rules: DP / TP / SP / EP / (PP via pipeline.py) on the
+(pod, data, model) mesh.
+
+The layout is Megatron-style TP (paper Fig. 2: column-parallel up
+projections, row-parallel down projections, two all-reduces per layer) with
+these extensions beyond the paper (recorded for EXPERIMENTS.md §Perf):
+  * sequence-parallel activations (reduce-scatter + all-gather instead of
+    all-reduce) — `mode="sp"`;
+  * expert parallelism: MoE expert tensors shard (E, d, f) ->
+    ("data", None, "model"), so dispatch lowers to an all-to-all over the
+    data axis;
+  * ZeRO-style optimizer-state sharding over the data axis.
+
+Rules match on parameter path names and apply to the *trailing* dims —
+stacked-unit leading axes (models/lm.py) are skipped automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data")     # batch / expert / ZeRO axes
+TP_AXIS = "model"
+
+# (regex on path, candidate trailing-dim specs — first fully-valid wins)
+_PARAM_RULES = [
+    (r"embed$", [("model", None)]),               # vocab-parallel
+    (r"head$", [(None, "model")]),
+    (r"(wq|wk|wv)$", [(None, "model")]),          # column-parallel
+    (r"(bq|bk|bv)$", [("model",)]),
+    (r"wo$", [("model", None)]),                  # row-parallel
+    (r"moe/router$", [(None, None)]),
+    # EP x TP; when n_experts doesn't divide the data axis (grok: 8 experts
+    # on 16-wide data) fall back to sharding the d_model dim over (pod,)data
+    (r"moe/w_(up|gate)$", [("data", None, "model"),
+                           (None, ("pod", "data"), "model"),
+                           (None, "data", "model"),
+                           (None, None, "model")]),
+    (r"moe/w_down$", [("data", "model", None),
+                      (None, "model", ("pod", "data")),
+                      (None, "model", "data"),
+                      (None, "model", None)]),
+    (r"mlp/w_(up|gate)$", [(None, "model")]),
+    (r"mlp/w_down$", [("model", None)]),
+    (r"(wr|wg)$", [(None, "model")]),             # rwkv head-parallel
+    (r"tmix/wo$", [("model", None)]),
+    (r"cmix/w_up$", [(None, "model")]),
+    (r"cmix/w_down$", [("model", None)]),
+    (r"(w_gate|w_in)$", [(None, "model")]),       # rglru channel-parallel
+    (r"(w_a|w_x)$", [(None, "model")]),
+    (r"rec/w_out$", [("model", None)]),
+    (r"conv_w$", [(None, "model")]),
+    (r"conv_b$", [("model",)]),
+    (r"lam$", [("model",)]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _axis_ok(mesh: Mesh, axis, dim: int) -> bool:
+    if axis is None:
+        return True
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return dim % size == 0 and dim >= size
+
+
+def _filter_axes(mesh: Mesh, axis):
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    if axis is None:
+        return None
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+SMALL_EXPERT_BYTES = 1 << 30    # <1 GiB: TP-only sharding is plenty
+
+# set per-arch by the launcher (set_model_config): kv-head divisibility
+# decides whether k/v projections shard or replicate under TP
+_ACTIVE_CFG = None
+
+
+def set_model_config(cfg):
+    global _ACTIVE_CFG
+    _ACTIVE_CFG = cfg
+
+
+def param_spec(mesh: Mesh, path, leaf) -> P:
+    """PartitionSpec for one parameter leaf."""
+    s = _path_str(path)
+    shape = leaf.shape
+    # GQA: when n_kv_heads doesn't divide the TP axis, sharding wk/wv cuts
+    # across head boundaries and every attention all-gathers K/V — cheaper
+    # to replicate the (small) kv projections and compute them redundantly
+    if _ACTIVE_CFG is not None and re.search(r"attn/(wk|wv|bk|bv)$", s):
+        tp = mesh.shape.get(TP_AXIS, 1)
+        if _ACTIVE_CFG.n_kv_heads and _ACTIVE_CFG.n_kv_heads % tp != 0:
+            return P()
+    # small MoE expert tensors (granite: 40 x 1536 x 512) stay TP-only —
+    # d-sharding them conflicts with the capacity-sharded dispatch buffers
+    # and forces resharding of every expert block
+    if re.search(r"moe/w_(up|down|gate)$", s):
+        import numpy as _np
+        if int(_np.prod(shape)) * 2 < SMALL_EXPERT_BYTES:
+            tp_dim = len(shape) - 2 if s.endswith("w_down") else len(shape) - 1
+            spec = [None] * len(shape)
+            if _axis_ok(mesh, TP_AXIS, shape[tp_dim]):
+                spec[tp_dim] = TP_AXIS
+            if _axis_ok(mesh, "data", shape[-3]) and shape[-3] > 1:
+                spec[-3] = "data"       # E over data when it divides
+            return P(*spec)
+    for pat, candidates in _PARAM_RULES:
+        if not re.search(pat, s):
+            continue
+        for trailing in candidates:
+            nlead = len(shape) - len(trailing)
+            if nlead < 0:
+                continue
+            spec = [None] * nlead + [_filter_axes(mesh, a) for a in trailing]
+            if all(_axis_ok(mesh, a, shape[i]) for i, a in enumerate(spec)):
+                return P(*spec)
+        # last resort: the first candidate with invalid axes dropped
+        trailing = candidates[0]
+        nlead = len(shape) - len(trailing)
+        spec = [None] * max(nlead, 0) + [_filter_axes(mesh, a)
+                                         for a in trailing][:len(shape)]
+        spec = [a if _axis_ok(mesh, a, shape[i]) else None
+                for i, a in enumerate(spec)]
+        return P(*spec)
+    return P()     # replicate (norms, small vectors)
+
+
+def param_shardings(mesh: Mesh, abstract_params):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_spec(mesh, p, l)),
+        abstract_params)
+
+
+def zero_spec(mesh: Mesh, path, leaf) -> P:
+    """ZeRO: additionally shard a replicated dim of the optimizer state
+    over the (pod,)data axes — fp32 master/moment tensors dominate training
+    memory, and unlike params they are touched once per step."""
+    base = param_spec(mesh, path, leaf)
+    spec = list(base) + [None] * (len(leaf.shape) - len(base))
+    used = set()
+    for a in spec:
+        for ax in (a if isinstance(a, tuple) else (a,)):
+            if ax:
+                used.add(ax)
+    free = tuple(a for a in ("pod", "data") if a in mesh.shape
+                 and a not in used)
+    if free:
+        for i, a in enumerate(spec):
+            if a is None and _axis_ok(mesh, free, leaf.shape[i]):
+                spec[i] = free if len(free) > 1 else free[0]
+                break
+        else:
+            for i, a in enumerate(spec):
+                if a is None and _axis_ok(mesh, free[0], leaf.shape[i]):
+                    spec[i] = free[0]
+                    break
+    return P(*spec)
+
+
+def opt_state_shardings(mesh: Mesh, abstract_opt):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, zero_spec(mesh, p, l)),
+        abstract_opt)
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Shard batch over (pod, data) when divisible; fall back gracefully."""
+    axes = [a for a in DP_AXES if a in mesh.shape]
+    full = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % full == 0:
+        return P(tuple(axes))
+    if "data" in mesh.shape and batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def _batch_axes(mesh: Mesh, batch: int):
+    """Mesh axes (tuple) to shard a batch dim over, or None."""
+    axes = tuple(a for a in DP_AXES if a in mesh.shape)
+    full = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % full == 0 and batch >= full:
+        return axes
+    if "data" in mesh.shape and batch % mesh.shape["data"] == 0 \
+            and batch >= mesh.shape["data"]:
+        return ("data",)
+    return None
+
+
+def data_shardings(mesh: Mesh, specs: dict):
+    """Shardings for input_specs dicts (tokens/targets/mask/frontend)."""
+    out = {}
+    for name, sds in specs.items():
+        ba = _batch_axes(mesh, sds.shape[0])
+        spec = [ba] + [None] * (len(sds.shape) - 1)
+        out[name] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_spec(mesh: Mesh, path, leaf, batch: int,
+               kv_mode: str = "channel") -> P:
+    """KV caches / recurrent state: batch over DP axes + one TP dim.
+
+    kv_mode="channel" (paper-faithful Megatron layout): the fused H*dh
+    channel dim shards over model — decode attention all-reduces partial
+    scores over the channel shards.
+    kv_mode="sequence" (beyond-paper, FlashDecoding-style split-KV): the
+    TIME dim shards over model — each shard computes online-softmax partials
+    over its positions and the combine is a tiny (B, H) all-reduce.
+    """
+    s = _path_str(path)
+    shape = leaf.shape
+    if s.endswith("pos") or s.endswith("enc_out"):
+        ba = _batch_axes(mesh, shape[0]) if shape else None
+        return P(*([ba] + [None] * (len(shape) - 1))) if shape else P()
+    spec = [None] * len(shape)
+    n = len(shape)
+    is_kv = s.endswith("/k") or s.endswith("/v") or s.endswith("xk") \
+        or s.endswith("xv")
+    if s.endswith("state"):
+        tp_try = [n - 3, n - 2]           # rwkv state (.., H, N, N)
+    elif is_kv and kv_mode == "sequence" and n >= 3:
+        tp_try = [n - 2]                  # time axis of (.., T, H*dh)
+    else:
+        tp_try = [n - 1]                  # fused kv channels / (.., d)
+    for i, d in enumerate(shape):
+        if d == batch:
+            spec[i] = _batch_axes(mesh, batch)
+            for j in tp_try:
+                if j > i and _axis_ok(mesh, TP_AXIS, shape[j]) and shape[j] > 1:
+                    spec[j] = TP_AXIS
+                    break
+            break
+    return P(*spec)
+
+
+def cache_shardings(mesh: Mesh, abstract_cache, batch: int,
+                    kv_mode: str = "channel"):
+    if kv_mode == "auto":
+        # measured policy (EXPERIMENTS.md §Perf): channel sharding is free
+        # when kv-heads divide TP (the per-head layout never crosses
+        # shards); otherwise sequence sharding (FlashDecoding split-KV)
+        # cuts decode collectives 16-883x
+        tp = mesh.shape.get(TP_AXIS, 1)
+        kvh = getattr(_ACTIVE_CFG, "n_kv_heads", 0) if _ACTIVE_CFG else 0
+        kv_mode = "channel" if (kvh and kvh % tp == 0) else "sequence"
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_spec(mesh, p, l, batch,
+                                                    kv_mode)),
+        abstract_cache)

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the operators the paper's performance model
+covers (Sec. III-B): tiled matmul, fused attention (online softmax [37]),
+norms, GELU — plus the WKV/linear-recurrence scan our RWKV/Griffin archs
+need (DESIGN.md Sec. 5 extension).
+
+Layout per kernel: <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd public wrapper; interpret=True off-TPU),
+<name>/ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+The BlockSpec tile sizes can be chosen by the LLMCompass mapper
+(core/mapper.py) — the mapper's (subtile_m, subtile_k, subtile_n) for the
+TPU preset IS the VMEM block shape (DESIGN.md Sec. 3: the mapper doubles as
+a Pallas block autotuner); see matmul.ops.mapper_blocks().
+"""
+from .matmul import ops as matmul
+from .flash_attention import ops as flash_attention
+from .rmsnorm import ops as rmsnorm
+from .gelu import ops as gelu
+from .decode_attention import ops as decode_attention
+from .wkv import ops as wkv
+
+__all__ = ["matmul", "flash_attention", "rmsnorm", "gelu",
+           "decode_attention", "wkv"]

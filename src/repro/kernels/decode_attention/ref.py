@@ -1,0 +1,21 @@
+"""Oracle for decode attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths, softcap: float = 0.0):
+    """q: (B, Hkv, G, D); k, v: (B, T, Hkv, D); lengths: (B,)."""
+    B, Hkv, G, D = q.shape
+    s = jnp.einsum("bhgd,bthd->bhgt", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    t = jnp.arange(k.shape[1])
+    mask = t[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", p.astype(v.dtype), v).astype(q.dtype)

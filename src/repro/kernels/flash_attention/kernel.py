@@ -1,0 +1,103 @@
+"""Fused attention Pallas kernel (online softmax [Milakov & Gimelshein],
+the algorithm the paper uses for its Softmax operator, fused into attention).
+
+Layouts: q (B, Hq, Sq, D), k/v (B, Hkv, Sk, D); GQA handled in the index
+maps (kv block index = h // G) so KV is read once per kv-head, matching the
+paper's GQA traffic accounting.
+
+Grid (b, h, qi, ki), ki innermost: running (m, l, acc) live in VMEM scratch
+across the ki sweep; output written on the last ki step. Causal masking via
+block-local iota; fully-masked blocks short-circuit via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 n_k: int, bq: int, bk: int, sk: int, causal: bool,
+                 window: int, softcap: float, scale: float):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    live = True
+    if causal:
+        live = ki * bk <= qi * bq + bq - 1   # block reaches the diagonal
+
+    @pl.when(jnp.asarray(live))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = k_pos < sk
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new) * (s > NEG_INF / 2)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, bq: int = 512,
+                           bk: int = 512, valid_k: int | None = None,
+                           interpret: bool = False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
+    valid_k: true KV length when callers pre-padded the KV axis."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    grid = (B, Hq, pl.cdiv(Sq, bq), pl.cdiv(Sk, bk))
+    kern = functools.partial(
+        _attn_kernel, n_k=grid[3], bq=bq, bk=bk,
+        sk=valid_k if valid_k is not None else Sk, causal=causal,
+        window=window, softcap=softcap, scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

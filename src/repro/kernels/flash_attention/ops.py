@@ -1,0 +1,40 @@
+"""Public fused-attention op (Pallas on TPU, interpret elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _pad_seq(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Sq, Sk = q.shape[2], k.shape[2]
+    bq_, bk_ = min(bq, Sq), min(bk, Sk)
+    qp = _pad_seq(q, 2, bq_)      # zero-pad: padded KV is masked in-kernel
+    kp = _pad_seq(k, 2, bk_)      # (valid_k below), and 0 * NaN from
+    vp = _pad_seq(v, 2, bk_)      # undefined reads never hits the accum
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 softcap=softcap, bq=bq_, bk=bk_,
+                                 valid_k=Sk, interpret=interpret)
+    return out[:, :, :Sq]
+
+
+reference = attention_ref

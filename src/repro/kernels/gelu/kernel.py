@@ -1,0 +1,55 @@
+"""GELU (tanh approximation [26], as the paper models it) + fused
+SwiGLU gate — elementwise Pallas kernels."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x ** 3)))
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _gelu(x).astype(o_ref.dtype)
+
+
+def _silu_mul_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * jax.nn.sigmoid(g) * u).astype(o_ref.dtype)
+
+
+def gelu_pallas(x, *, br: int = 256, interpret: bool = False):
+    """x: (R, C) (callers flatten)."""
+    R, C = x.shape
+    br = min(br, R)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(pl.cdiv(R, br),),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def silu_mul_pallas(g, u, *, br: int = 256, interpret: bool = False):
+    R, C = g.shape
+    br = min(br, R)
+    return pl.pallas_call(
+        _silu_mul_kernel,
+        grid=(pl.cdiv(R, br),),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), g.dtype),
+        interpret=interpret,
+    )(g, u)

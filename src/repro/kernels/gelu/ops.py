@@ -1,0 +1,27 @@
+"""Public activation ops."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import gelu_pallas, silu_mul_pallas
+from .ref import gelu_ref, silu_mul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def gelu(x, *, br: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return gelu_pallas(x, br=br, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def silu_mul(g, u, *, br: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return silu_mul_pallas(g, u, br=br, interpret=interpret)
+
+
+reference = gelu_ref
+reference_silu_mul = silu_mul_ref

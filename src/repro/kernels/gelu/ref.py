@@ -1,0 +1,12 @@
+"""Oracles for the activation kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def gelu_ref(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def silu_mul_ref(g, u):
+    gf = g.astype(jnp.float32)
+    return (jax.nn.silu(gf) * u.astype(jnp.float32)).astype(g.dtype)

@@ -1,0 +1,58 @@
+"""Tiled matmul Pallas kernel — the paper's central operator (Sec. III-B1).
+
+Mapping onto the paper's hierarchy (TPU adaptation, DESIGN.md Sec. 3):
+  main memory -> global buffer  tile   == HBM -> VMEM BlockSpec block
+  schedule scheme 1 (output-parallel)  == (i, j) grid axes
+  schedule scheme 2 (k-split + reduce) == k grid axis revisiting the same
+                                          output block with a VMEM accumulator
+  double buffering                     == Pallas pipelining (automatic)
+
+Accumulation is fp32 in a VMEM scratch regardless of input dtype; the MXU
+dims (bm, bk, bn) must be multiples of 128 for full utilization (paper
+implication (5): buffers sized to keep the systolic array busy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 256,
+                  bk: int = 512, bn: int = 256,
+                  out_dtype=None, interpret: bool = False) -> jax.Array:
+    """C[M,N] = A[M,K] @ B[K,N], tiled (bm, bk, bn)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    out_dtype = out_dtype or a.dtype
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,53 @@
+"""Public matmul op: Pallas on TPU, interpret mode elsewhere.
+
+mapper_blocks() asks the LLMCompass mapper (the paper's contribution) for
+the performance-optimal VMEM tiling of a given GEMM on the TPU preset and
+returns it as Pallas block sizes — the mapper doubles as a block autotuner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import matmul_pallas  # noqa: E402
+from .ref import matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mapper_blocks(m: int, k: int, n: int):
+    from ...core.hardware import google_tpu_v5e
+    from ...core.mapper import matmul_perf
+    r = matmul_perf(google_tpu_v5e(), m, k, n)
+    f = lambda x: max(128, min(x // 128 * 128, 1024)) if x >= 128 else x
+    return (f(r.mapping.subtile_m), f(r.mapping.subtile_k),
+            f(r.mapping.subtile_n))
+
+
+def _pad_to(x, mults):
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
+           interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = a.shape[0], b.shape[1]
+    bm_, bk_, bn_ = min(bm, m), min(bk, a.shape[1]), min(bn, n)
+    # zero-pad to block multiples: out-of-bounds block reads are undefined
+    # on TPU (NaN in interpret mode) and k-padding would pollute the sum
+    ap = _pad_to(a, (bm_, bk_))
+    bp = _pad_to(b, (bk_, bn_))
+    out = matmul_pallas(ap, bp, bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+    return out[:m, :n]
+
+
+reference = matmul_ref

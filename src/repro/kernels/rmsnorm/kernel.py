@@ -1,0 +1,61 @@
+"""Fused RMSNorm / LayerNorm Pallas kernel (paper Sec. III-B3).
+
+Row-block tiling: each grid step normalizes a (br, C) block entirely in
+VMEM — one HBM read + one write per element (the fusion the paper's model
+assumes for norm ops). fp32 statistics regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = ((x - mu) * jax.lax.rsqrt(var + eps)
+                  * g_ref[...].astype(jnp.float32)
+                  + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, g, *, eps: float = 1e-6, br: int = 256,
+                   interpret: bool = False):
+    """x: (R, C); g: (C,)."""
+    R, C = x.shape
+    br = min(br, R)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(pl.cdiv(R, br),),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((1, C), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, g.reshape(1, C))
+
+
+def layernorm_pallas(x, g, b, *, eps: float = 1e-5, br: int = 256,
+                     interpret: bool = False):
+    R, C = x.shape
+    br = min(br, R)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(pl.cdiv(R, br),),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((1, C), lambda i: (0, 0)),
+                  pl.BlockSpec((1, C), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, g.reshape(1, C), b.reshape(1, C))

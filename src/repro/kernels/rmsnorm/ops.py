@@ -1,0 +1,29 @@
+"""Public fused-norm ops."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import layernorm_pallas, rmsnorm_pallas
+from .ref import layernorm_ref, rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def rmsnorm(x, g, *, eps: float = 1e-6, br: int = 256,
+            interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rmsnorm_pallas(x, g, eps=eps, br=br, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def layernorm(x, g, b, *, eps: float = 1e-5, br: int = 256,
+              interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return layernorm_pallas(x, g, b, eps=eps, br=br, interpret=interpret)
+
+
+reference = rmsnorm_ref
+reference_layernorm = layernorm_ref

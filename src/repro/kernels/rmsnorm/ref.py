@@ -1,0 +1,17 @@
+"""Oracles for the fused norm kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, g, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_ref(x, g, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,78 @@
+"""RWKV6 WKV linear-recurrence Pallas kernel (DESIGN.md Sec. 5 extension).
+
+TPU adaptation of the chunked-recurrence idea: the (N, N) matrix state
+lives in VMEM scratch and persists across sequential grid steps along the
+time-chunk axis (TPU grids iterate sequentially per core — the innermost
+grid dimension is the recurrence carrier). Each grid step streams one
+(L, N) chunk of r/k/v/w through VMEM; the inner L-step recurrence runs on
+registers via fori_loop.
+
+Layouts: r,k,v,w (BH, T, N) fp32; u (1, N); out (BH, T, N) + final state
+(BH, N, N). Grid (BH, T/L), time innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
+                state_ref, *, L: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[...].astype(jnp.float32)       # (1, N)
+
+    def step(t, state):
+        r = r_ref[0, t, :].astype(jnp.float32)[None, :]    # (1, N)
+        k = k_ref[0, t, :].astype(jnp.float32)[None, :]
+        v = v_ref[0, t, :].astype(jnp.float32)[None, :]
+        w = w_ref[0, t, :].astype(jnp.float32)[None, :]
+        kv = k.T @ v                                        # (N, N)
+        out = r @ (state + u.T * kv)                        # (1, N)
+        o_ref[0, t, :] = out[0].astype(o_ref.dtype)
+        return state * w.T + kv
+
+    state = jax.lax.fori_loop(0, L, step, state_ref[...])
+    state_ref[...] = state
+
+    @pl.when(ci == n_chunks - 1)
+    def _store():
+        s_out_ref[0] = state
+
+
+def wkv_pallas(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (BH, T, N); u: (N,). Returns out (BH, T, N), state (BH, N, N)."""
+    BH, T, N = r.shape
+    L = min(chunk, T)
+    n_chunks = pl.cdiv(T, L)
+    kern = functools.partial(_wkv_kernel, L=L, n_chunks=n_chunks)
+    out, state = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N), lambda b, c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, n_chunks * L, N), r.dtype),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u.reshape(1, N))
+    return out[:, :T], state

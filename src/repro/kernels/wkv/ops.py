@@ -1,0 +1,33 @@
+"""Public WKV op."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wkv_pallas
+from .ref import wkv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T = r.shape[1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        # pad r/k/v with zeros and w with ONES (identity decay): the padded
+        # steps leave the carried state untouched and their outputs are
+        # sliced off — undefined tail-block reads would poison the state
+        import jax.numpy as jnp
+        z = ((0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, z)
+        k = jnp.pad(k, z)
+        v = jnp.pad(v, z)
+        w = jnp.pad(w, z, constant_values=1.0)
+    out, state = wkv_pallas(r, k, v, w, u, chunk=L, interpret=interpret)
+    return out[:, :T], state
+
+
+reference = wkv_ref

@@ -1,0 +1,20 @@
+"""Oracle: sequential WKV recurrence in pure jnp."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (BH, T, N); u: (N,). Matches models/recurrent._wkv_step."""
+    BH, T, N = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                      # (BH, N) each
+        kv = kt[:, :, None] * vt[:, None, :]     # (BH, N, N)
+        out = jnp.einsum("bn,bnm->bm", rt, state + u[None, :, None] * kv)
+        state = state * wt[:, :, None] + kv
+        return state, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state0 = jnp.zeros((BH, N, N), jnp.float32)
+    state, outs = lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state

@@ -1,0 +1,311 @@
+"""Compiled-HLO analysis for the roofline report.
+
+cost_analysis() provides FLOPs and HBM bytes. Collective bytes are NOT in
+cost_analysis — we parse the optimized (post-SPMD) HLO text and sum operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, scaling instructions inside while-loop bodies by the
+loop trip count (the scan-over-units puts the per-layer collectives inside
+a while body executed n_units times).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"(?:body|condition|to_apply|branch_computations)="
+                       r"[{]?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _instr_collective_bytes(line: str, kind: str) -> int:
+    """Bytes moved by one collective instruction (per device).
+
+    Optimized HLO shows operands as bare names, so we read the RESULT type
+    (the segment between '=' and the op name). For all-reduce / all-gather /
+    all-to-all / collective-permute the result size is the data volume; for
+    reduce-scatter the input volume is result x group_size.
+    """
+    m = re.search(rf"=\s+(.*?)\s+{kind}(?:-start)?\(", line)
+    if not m:
+        return 0
+    result_seg = m.group(1)
+    total = 0
+    for dm in _SHAPE_RE.finditer(result_seg):
+        total += _shape_bytes(dm.group(1), dm.group(2))
+    if kind == "reduce-scatter":
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            total *= int(gm.group(2))
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    total_bytes: float = 0.0
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    count: int = 0
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective operand bytes, loop-trip-count aware."""
+    # split into computations
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # direct collective bytes per computation
+    direct: Dict[str, CollectiveStats] = {}
+    calls: Dict[str, list] = {}
+    trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        st = CollectiveStats()
+        calls[name] = []
+        for line in lines:
+            low = line.strip()
+            if any(c in low for c in _COLLECTIVES) and "(" in low \
+                    and "-done" not in low:
+                for kind in _COLLECTIVES:
+                    if re.search(rf"\b{kind}(?:-start)?\(", low):
+                        b = _instr_collective_bytes(low, kind)
+                        st.total_bytes += b
+                        st.by_kind[kind] = st.by_kind.get(kind, 0.0) + b
+                        st.count += 1
+                        break
+            if " while(" in low or low.startswith("while("):
+                tm = _TRIP_RE.search(low)
+                t = int(tm.group(1)) if tm else 1
+                for cm in _CALLS_RE.finditer(low):
+                    callee = cm.group(1)
+                    calls[name].append((callee, t))
+                    trip[callee] = max(trip.get(callee, 1), t)
+            else:
+                for cm in _CALLS_RE.finditer(low):
+                    calls[name].append((cm.group(1), 1))
+        direct[name] = st
+
+    # propagate bottom-up from ENTRY (assume DAG of computations)
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def total(name: str) -> tuple:
+        st = direct.get(name, CollectiveStats())
+        tb = st.total_bytes
+        kinds = dict(st.by_kind)
+        cnt = st.count
+        for callee, t in calls.get(name, []):
+            if callee == name or callee not in comps:
+                continue
+            ctb, ckinds, ccnt = total(callee)
+            tb += t * ctb
+            cnt += t * ccnt
+            for k, v in ckinds:
+                kinds[k] = kinds.get(k, 0.0) + t * v
+        return tb, tuple(sorted(kinds.items())), cnt
+
+    entry = None
+    for name in comps:
+        if "main" in name or entry is None:
+            pass
+    # ENTRY computation: the one marked ENTRY in the original text
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    entry = m.group(1) if m else next(iter(comps), None)
+    if entry is None:
+        return CollectiveStats()
+    tb, kinds, cnt = total(entry)
+    return CollectiveStats(total_bytes=tb, by_kind=dict(kinds), count=cnt)
+
+
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "copy", "copy-start", "copy-done", "after-all", "partition-id",
+             "replica-id", "iota", "broadcast", "reshape"}
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def hlo_costs(hlo_text: str) -> dict:
+    """Trip-count-aware FLOPs and HBM-traffic estimate from optimized HLO.
+
+    compiled.cost_analysis() counts while-loop bodies ONCE — our layer stack
+    is a scan, so it undercounts by ~n_layers. This pass multiplies each
+    computation's costs by its loop trip count (known_trip_count backend
+    config) instead.
+
+    flops: dot instructions only (2 * prod(result) * prod(contract dims));
+    elementwise flops are <1% for transformer workloads and are ignored.
+    bytes: sum of (operand + result) sizes at instruction/fusion boundaries
+    — fusion boundaries are materialization points, i.e. an HBM-traffic
+    model in the paper's own spirit (tile-level, not cycle-level).
+    """
+    shapes: Dict[str, tuple] = {}      # name -> (dtype, dims list) of result
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        comps[cur].append(line)
+        im = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$", line)
+        if im:
+            name, rest = im.group(1), im.group(2)
+            tshapes = []
+            # result type: everything before the op name token
+            head = rest.split("(")[0]
+            for sm in _SHAPE_RE.finditer(head):
+                tshapes.append((sm.group(1), sm.group(2)))
+            if tshapes:
+                shapes[name] = tshapes
+
+    def result_bytes(name):
+        return sum(_shape_bytes(dt, dm) for dt, dm in shapes.get(name, []))
+
+    def line_cost(line):
+        im = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$", line)
+        if not im:
+            return 0.0, 0.0
+        name, rest = im.group(1), im.group(2)
+        op_m = re.search(r"\)\s*|\]\}?\s*", rest)
+        tokens = rest.split("(")[0].strip().split()
+        op = tokens[-1] if tokens else ""
+        if op in _SKIP_OPS or not op:
+            return 0.0, 0.0
+        flops = 0.0
+        if op == "dot":
+            res = shapes.get(name, [])
+            n_res = 0
+            for dt, dm in res:
+                n = 1
+                for d in dm.split(","):
+                    if d:
+                        n *= int(d)
+                n_res += n
+            cm = _DOT_CONTRACT_RE.search(rest)
+            k = 1
+            if cm:
+                # lhs operand shape
+                args = rest[rest.index("("):]
+                om = _OPND_RE.search(args)
+                if om and om.group(1) in shapes:
+                    dims = shapes[om.group(1)][0][1].split(",")
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(dims) and dims[int(ci)]:
+                            k *= int(dims[int(ci)])
+            flops = 2.0 * n_res * k
+        # bytes: operands + result, with slicing ops counted at the size
+        # they actually touch (a dynamic-slice of the stacked layer params
+        # reads one layer, not the whole stack)
+        args = rest[rest.index("("):] if "(" in rest else ""
+        opnds = [om.group(1) for om in _OPND_RE.finditer(args)]
+        if op in ("dynamic-slice", "gather", "slice"):
+            b = 2.0 * result_bytes(name)
+        elif op == "dynamic-update-slice":
+            upd = result_bytes(opnds[1]) if len(opnds) > 1 else 0
+            b = 2.0 * upd
+        elif op == "scatter":
+            upd = result_bytes(opnds[2]) if len(opnds) > 2 else 0
+            b = 2.0 * upd
+        elif op == "while":
+            b = 0.0          # body costs propagate via trip counts
+        else:
+            b = result_bytes(name)
+            for o in opnds:
+                b += result_bytes(o)
+        return flops, float(b)
+
+    direct: Dict[str, tuple] = {}
+    calls: Dict[str, list] = {}
+    for cname, lines in comps.items():
+        f = b = 0.0
+        calls[cname] = []
+        for line in lines:
+            lf, lb = line_cost(line)
+            f += lf
+            b += lb
+            if " while(" in line or line.strip().startswith("while("):
+                tm = _TRIP_RE.search(line)
+                t = int(tm.group(1)) if tm else 1
+                for cm2 in _CALLS_RE.finditer(line):
+                    calls[cname].append((cm2.group(1), t))
+            else:
+                for cm2 in _CALLS_RE.finditer(line):
+                    calls[cname].append((cm2.group(1), 1))
+        direct[cname] = (f, b)
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def total(cname):
+        f, b = direct.get(cname, (0.0, 0.0))
+        for callee, t in calls.get(cname, []):
+            if callee == cname or callee not in comps:
+                continue
+            cf, cb = total(callee)
+            f += t * cf
+            b += t * cb
+        return f, b
+
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    entry = m.group(1) if m else next(iter(comps), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0}
+    f, b = total(entry)
+    return {"flops": f, "bytes": b}
+
+
+def cost_summary(compiled) -> dict:
+    """Extract flops/bytes from compiled.cost_analysis() (per-device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_ = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes_accessed": bytes_,
+            "optimal_seconds": float(ca.get("optimal_seconds", 0.0))}
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0))
+    out["total_bytes"] = (out["argument_size_in_bytes"]
+                          + out["output_size_in_bytes"]
+                          + out["temp_size_in_bytes"]
+                          - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Mesh axes:
+  pod    — across-pod (DCN) axis: data parallel by default, pipeline
+           parallel with --pp (distributed/pipeline.py)
+  data   — within-pod batch/expert/ZeRO axis
+  model  — tensor parallel axis (Megatron layout, paper Fig. 2)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over host devices for tests/examples."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,144 @@
+"""§Roofline generator: three-term roofline per (arch x shape x mesh) from
+the dry-run artifacts.
+
+    compute   = HLO_FLOPs_per_chip / 197 TFLOP/s      (trip-count-aware)
+    memory    = HBM_bytes_per_chip / 819 GB/s         (LLMCompass model —
+                the paper's tile-level traffic accounting; the CPU-HLO
+                boundary count is reported alongside as an upper bound)
+    collective= collective_bytes_per_chip / 50 GB/s   (per-ICI-link)
+
+MODEL_FLOPS: train = 6*N_active*tokens, prefill = 2*N_active*tokens,
+decode = 2*N_active*batch (+ attention KV terms are in HLO, not MODEL —
+the ratio shows remat/attention/dispatch overhead).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from dataclasses import dataclass
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..core import hardware as hw
+from ..core.graph import Plan, model_ops
+from ..core.roofline import (TPU_V5E_PEAK_BF16, TPU_V5E_HBM_BW,
+                             TPU_V5E_ICI_BW)
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq
+
+
+_SIM = {}
+
+
+def simulated_hbm_bytes(arch: str, shape) -> float:
+    """Per-chip HBM traffic from the LLMCompass model (paper Sec. III-B)."""
+    key = (arch, shape.name)
+    if key in _SIM:
+        return _SIM[key]
+    cfg = get_config(arch)
+    node = hw.tpu_v5e_pod(256)
+    plan = Plan(tp=16, dp=16)
+    if shape.kind == "decode":
+        cost = model_ops(cfg, node, plan,
+                         batch=max(shape.global_batch // 16, 1), seq=1,
+                         kv_len=shape.seq_len)
+        bytes_ = cost.bytes
+    else:
+        cost = model_ops(cfg, node, plan,
+                         batch=max(shape.global_batch // 16, 1),
+                         seq=shape.seq_len, kv_len=shape.seq_len)
+        bytes_ = cost.bytes
+        if shape.kind == "train":
+            bytes_ *= 3.5       # bwd + remat re-reads (documented factor)
+    _SIM[key] = bytes_
+    return bytes_
+
+
+@dataclass
+class Row:
+    arch: str
+    shape: str
+    mesh: str
+    fits: bool
+    mem_gib: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_ratio: float
+    dominant: str
+    note: str
+
+
+NOTES = {
+    "compute": "more chips / lower precision / cut remat recompute",
+    "memory": "wider batch per chip or KV/weight quantization to raise "
+              "arithmetic intensity",
+    "collective": "shard KV along sequence / overlap TP collectives (SP) / "
+                  "larger per-chip shards",
+}
+
+
+def build_rows(dryrun_dir: str = DRYRUN_DIR):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("skipped") or not rec.get("ok"):
+            continue
+        arch, shape_name, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        shape = SHAPES[shape_name]
+        cfg = get_config(arch)
+        n_dev = rec["devices"]
+        flops_dev = rec["hlo_cost"]["flops"]
+        coll_dev = rec["collectives"]["bytes"]
+        hbm_dev = simulated_hbm_bytes(arch, shape) \
+            * (256 / n_dev if shape.kind != "decode" else 1.0)
+        ct = flops_dev / TPU_V5E_PEAK_BF16
+        mt = hbm_dev / TPU_V5E_HBM_BW
+        lt = coll_dev / TPU_V5E_ICI_BW
+        terms = {"compute": ct, "memory": mt, "collective": lt}
+        dom = max(terms, key=terms.get)
+        ratio = model_flops(cfg, shape) / max(flops_dev * n_dev, 1.0)
+        rows.append(Row(
+            arch=arch, shape=shape_name, mesh=mesh,
+            fits=rec["memory"]["total_bytes"] <= 16 * 2 ** 30,
+            mem_gib=rec["memory"]["total_bytes"] / 2 ** 30,
+            compute_s=ct, memory_s=mt, collective_s=lt,
+            model_flops_ratio=ratio, dominant=dom, note=NOTES[dom]))
+    return rows
+
+
+def markdown_table(rows, mesh: str = "single") -> str:
+    out = ["| arch | shape | fits<=16GiB | mem/chip | compute s | memory s |"
+           " collective s | dominant | MODEL/HLO | next lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.mesh != mesh:
+            continue
+        out.append(
+            f"| {r.arch} | {r.shape} | {'Y' if r.fits else 'N'} "
+            f"| {r.mem_gib:.1f} | {r.compute_s:.3e} | {r.memory_s:.3e} "
+            f"| {r.collective_s:.3e} | **{r.dominant}** "
+            f"| {r.model_flops_ratio:.2f} | {r.note} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = build_rows()
+    print(f"{len(rows)} cells analyzed")
+    print(markdown_table(rows, "single"))
+    print()
+    print(markdown_table(rows, "multi"))
+
+
+if __name__ == "__main__":
+    main()

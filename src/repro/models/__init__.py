@@ -1,0 +1,69 @@
+"""Model zoo facade.
+
+All 10 assigned architectures route through the same skeleton (lm.py) —
+the layer-kind sequence derived from the ModelConfig selects dense / MoE /
+RWKV / RG-LRU / cross-attention / enc-dec structure.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import layers, recurrent, lm
+from .lm import (init_params, forward, loss_fn, init_cache, prefill,
+                 decode_step, unit_structure, layer_kinds)
+
+
+def needs_frontend(cfg: ModelConfig) -> bool:
+    return cfg.family in ("audio", "vlm")
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter shapes without allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(p)) if hasattr(p, "size") else 0
+               for p in jax.tree.leaves(params))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train  -> {tokens, targets, mask (+frontend)}
+    prefill-> {tokens (+frontend)}
+    decode -> {token} (cache comes from abstract_cache)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+    elif shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:   # decode: one new token against a seq_len-deep cache
+        spec = {"token": jax.ShapeDtypeStruct((B,), i32)}
+    if needs_frontend(cfg) and shape.kind != "decode":
+        nf = max(cfg.n_frontend_tokens, 1)
+        spec["frontend"] = jax.ShapeDtypeStruct((B, nf, cfg.d_model),
+                                                jnp.bfloat16)
+    return spec
+
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "unit_structure", "layer_kinds", "abstract_params",
+           "abstract_cache", "input_specs", "needs_frontend", "param_count",
+           "layers", "recurrent", "lm"]

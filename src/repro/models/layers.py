@@ -1,0 +1,467 @@
+"""Model-zoo primitives, pure JAX (no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns mirror apply fns.
+  * activations bf16, reductions/normalizers fp32 (mixed precision).
+  * attention uses the memory-efficient chunked online-softmax form
+    (flash-attention algorithm) in pure jnp — this is both the production
+    path the dry-run lowers (no materialized S x S scores) and the oracle
+    the Pallas kernels are checked against.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+
+Params = dict
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def norm_init(cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (partial-fraction aware)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ModelConfig) -> jnp.ndarray:
+    rot = int(cfg.d_head * cfg.rope_fraction) // 2 * 2
+    if rot == 0:
+        return jnp.zeros((0,), jnp.float32)
+    return 1.0 / (cfg.rope_theta
+                  ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(cfg: ModelConfig, x, positions):
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    inv = rope_frequencies(cfg)
+    rot = inv.shape[0] * 2
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv   # (.., seq, rot/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]    # broadcast over heads
+    cos = cos[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    xr = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int, offset: int = 0) -> jnp.ndarray:
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang[:, : (d - d // 2)]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (pure jnp oracle / production dry-run path)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, chunk_q: int = 1024, chunk_k: int = 1024,
+                    logit_softcap: float = 0.0, kv_valid_len=None,
+                    static: bool = False):
+    """Memory-efficient attention (flash algorithm, pure jnp).
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); GQA via Hq = G * Hkv.
+    q_offset: absolute position of q[0] (decode / chunked prefill).
+    window: >0 limits attention to the last `window` keys (local attention).
+    kv_valid_len: optional (B,) in-cache valid lengths (serving).
+    static=True unrolls the (q_chunk x kv_chunk) block loop in Python —
+      only visited blocks appear in the HLO (no masked-block waste) and the
+      result is reverse-mode differentiable (training path, small nq).
+    static=False streams kv chunks with a while_loop + block skipping
+      (serving path: arbitrary lengths, not differentiable).
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    chunk_q = min(chunk_q, Sq)
+    chunk_k = min(chunk_k, Sk)
+    nq = -(-Sq // chunk_q)
+    nk = -(-Sk // chunk_k)
+    pad_q = nq * chunk_q - Sq
+    pad_k = nk * chunk_k - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    qp = qp.reshape(B, nq, chunk_q, Hkv, G, D)
+    kp = kp.reshape(B, nk, chunk_k, Hkv, D)
+    vp = vp.reshape(B, nk, chunk_k, Hkv, D)
+
+    def kv_block(carry, q_blk, q_pos, k_blk, v_blk, k_pos):
+        acc, m, l = carry
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        if logit_softcap > 0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        mask = jnp.ones((chunk_q, chunk_k), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= (k_pos < Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_valid_len is not None:
+            bmask = k_pos[None, :] < kv_valid_len[:, None]   # (B, chunk_k)
+            s = jnp.where(bmask[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        # guard fully-masked blocks: exp(s - m) -> 0, not 1
+        p = jnp.exp(s - m_new[..., None]) * (s > NEG_INF / 2)
+        corr = jnp.exp(jnp.minimum(m - m_new, 0.0))
+        l_new = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    def init_carry():
+        return (jnp.zeros((B, Hkv, G, chunk_q, D), jnp.float32),
+                jnp.full((B, Hkv, G, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, chunk_q), jnp.float32))
+
+    def finish(carry):
+        acc, _, l = carry
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))   # (B, cq, Hkv, G, D)
+
+    if static:
+        # ---- python-unrolled visited blocks (differentiable) ----
+        outs = []
+        for qi in range(nq):
+            q_blk = qp[:, qi]
+            q_pos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+            q_lo = q_offset + qi * chunk_q
+            q_hi = q_offset + (qi + 1) * chunk_q - 1
+            carry = init_carry()
+            for ki in range(nk):
+                k_lo, k_hi = ki * chunk_k, (ki + 1) * chunk_k - 1
+                if causal and k_lo > q_hi:
+                    continue                        # above the diagonal
+                if window and k_hi <= q_lo - window:
+                    continue                        # left of the window
+                k_pos = k_lo + jnp.arange(chunk_k)
+                carry = kv_block(carry, q_blk, q_pos, kp[:, ki], vp[:, ki],
+                                 k_pos)
+            outs.append(finish(carry))
+        out = jnp.concatenate(outs, axis=1).reshape(B, nq * chunk_q, Hq, D)
+        return out[:, :Sq].astype(q.dtype)
+
+    # ---- streaming while_loop with block skip (serving) ----
+    q_base = jnp.asarray(q_offset)
+
+    def one_q_chunk(qi):
+        q_blk = qp[:, qi]
+        q_pos = q_base + qi * chunk_q + jnp.arange(chunk_q)
+        if causal:
+            last_k = jnp.minimum((q_base + (qi + 1) * chunk_q - 1)
+                                 // chunk_k + 1, nk)
+        else:
+            last_k = jnp.asarray(nk)
+        if window:
+            first_k = jnp.maximum((q_base + qi * chunk_q - window + 1)
+                                  // chunk_k, 0)
+        else:
+            first_k = jnp.asarray(0)
+
+        def body(state):
+            carry, ki = state
+            k_blk = lax.dynamic_index_in_dim(kp, ki, 1, keepdims=False)
+            v_blk = lax.dynamic_index_in_dim(vp, ki, 1, keepdims=False)
+            k_pos = ki * chunk_k + jnp.arange(chunk_k)
+            return kv_block(carry, q_blk, q_pos, k_blk, v_blk, k_pos), ki + 1
+
+        state = (init_carry(), first_k.astype(jnp.int32))
+        state = lax.while_loop(lambda s: s[1] < last_k, body, state)
+        return finish(state[0])
+
+    outs = lax.map(one_q_chunk, jnp.arange(nq))
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(B, nq * chunk_q, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, q_offset=0,
+                        logit_softcap: float = 0.0, kv_valid_len=None):
+    """Naive full-score attention (small shapes / test oracle)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_valid_len is not None:
+        bmask = k_pos[None, :] < kv_valid_len[:, None]
+        s = jnp.where(bmask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# attention block (self or cross), GQA + qk-norm + rope + bias
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key) -> Params:
+    """Separate q/k/v projections: a fused QKV matmul would have to be
+    SPLIT along the TP-sharded output axis, which GSPMD lowers to
+    collective-permute redistribution every layer (§Perf iteration 5)."""
+    d, dh = cfg.d_model, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _init(k1, (d, cfg.n_heads * dh)),
+        "wk": _init(k2, (d, cfg.n_kv_heads * dh)),
+        "wv": _init(k4, (d, cfg.n_kv_heads * dh)),
+        "wo": _init(k3, (cfg.n_heads * dh, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.bfloat16)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def attn_qkv(cfg: ModelConfig, p: Params, x, kv_src=None, positions=None):
+    """Compute rope'd q, k, v. kv_src=None -> self-attention."""
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    src = x if kv_src is None else kv_src
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, src.shape[1], cfg.n_kv_heads, dh)
+    v = v.reshape(B, src.shape[1], cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is not None and kv_src is None and cfg.rope_fraction > 0:
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+def attn_out(p: Params, o):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain) and MoE
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    """Gate/up projections kept separate: a fused (d, 2*ff) matmul must be
+    SPLIT along the TP-sharded axis -> collective-permute per layer."""
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": _init(k1, (cfg.d_model, d_ff)),
+         "w_down": _init(k2, (d_ff, cfg.d_model),
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers))}
+    if cfg.mlp_gated:
+        p["w_gate"] = _init(k3, (cfg.d_model, d_ff))
+    return p
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if cfg.activation == "relu":
+        return jnp.square(jax.nn.relu(x))          # rwkv channel-mix relu^2
+    return jax.nn.silu(x)
+
+
+def mlp_apply(cfg: ModelConfig, p: Params, x):
+    if cfg.mlp_gated:
+        h = _act(cfg, x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = _act(cfg, x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def _moe_pad_experts(E: int) -> int:
+    """Pad the expert count to a multiple of the data axis so the expert
+    buffers/weights shard (EP) instead of replicating — granite's 40
+    experts on a 16-wide data axis become 48 (§Perf iteration: +20% MoE
+    flops on zero rows buys proper all-to-all dispatch). Runtime-only: the
+    router and parameters keep the true E."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        return E
+    if am is None or not am.shape:
+        return E
+    data = dict(am.shape).get("data", 1)
+    if data <= 1 or E % data == 0:
+        return E
+    return -(-E // data) * data
+
+
+def _moe_shard(buf):
+    """Constrain the (E, capacity, d/f) expert buffer to the EP layout when
+    a mesh is active: experts over the data axis (classic EP — the dispatch
+    scatter lowers to an all-to-all), or, when n_experts doesn't divide it,
+    the capacity axis over (pod,)data so the buffer still never
+    materializes replicated."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        return buf
+    if am is None or not am.shape:
+        return buf
+    shape = dict(am.shape)
+    from jax.sharding import PartitionSpec as P
+    if "data" in shape and buf.shape[0] % shape["data"] == 0 \
+            and buf.shape[0] >= shape["data"]:
+        return lax.with_sharding_constraint(buf, P("data", None, None))
+    dp = tuple(a for a in ("pod", "data") if a in shape)
+    if dp:
+        n = 1
+        for a in dp:
+            n *= shape[a]
+        if buf.shape[1] % n == 0 and buf.shape[1] >= n:
+            return lax.with_sharding_constraint(
+                buf, P(None, dp if len(dp) > 1 else dp[0], None))
+    return buf
+
+
+def moe_init(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": _init(k1, (cfg.d_model, cfg.n_experts), dtype=jnp.float32),
+        "w_up": _init(k2, (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+        "w_down": _init(k3, (cfg.n_experts, cfg.d_ff, cfg.d_model),
+                        scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = _init(k4, (cfg.n_experts, cfg.d_model, cfg.d_ff))
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x, capacity_factor: float = 1.25):
+    """Top-k routed MoE with capacity + drop (Switch/GShard style).
+
+    Sort-free scatter dispatch: tokens are gathered per expert into an
+    (E, capacity, d) buffer — under expert parallelism the E axis shards and
+    XLA lowers the gather/scatter to all-to-all. Returns (y, aux_loss).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = lax.top_k(probs, k)                    # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * T * k / E))
+    # position of each (token, choice) within its expert's buffer
+    flat_idx = idx.reshape(-1)                          # (T*k,)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) * onehot - 1
+    pos = pos_in_expert.max(-1)                         # (T*k,)
+    keep = pos < capacity
+    tok_rep = jnp.repeat(jnp.arange(T), k)
+
+    # 2D scatter into the (E, capacity, d) buffer: keeps the expert axis
+    # intact so it shards over the EP (data) axis; over-capacity tokens
+    # fall off via mode="drop"
+    E_pad = _moe_pad_experts(E)
+    w_up, w_down = p["w_up"], p["w_down"]
+    w_gate = p.get("w_gate")
+    if E_pad != E:
+        zpad = ((0, E_pad - E), (0, 0), (0, 0))
+        w_up = jnp.pad(w_up, zpad)
+        w_down = jnp.pad(w_down, zpad)
+        if w_gate is not None:
+            w_gate = jnp.pad(w_gate, zpad)
+    buf = jnp.zeros((E_pad, capacity, d), xt.dtype)
+    hidden = buf.at[flat_idx, jnp.where(keep, pos, capacity)].set(
+        xt[tok_rep], mode="drop")
+    hidden = _moe_shard(hidden)
+
+    up = jnp.einsum("ecd,edf->ecf", hidden, w_up)
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", hidden, w_gate)
+        h = _act(cfg, g) * up
+    else:
+        h = _act(cfg, up)
+    out = jnp.einsum("ecf,efd->ecd", h, w_down)
+    out = _moe_shard(out)
+    out_tok = out[flat_idx, jnp.clip(pos, 0, capacity - 1)]
+    out_tok = jnp.where(keep[:, None], out_tok, 0.0)
+    y = jnp.zeros((T, d), x.dtype).at[tok_rep].add(
+        (out_tok * gate.reshape(-1)[:, None]).astype(x.dtype))
+
+    # load-balancing aux loss (Switch): E * sum(frac_tokens * frac_probs)
+    me = probs.mean(0)
+    ce = jnp.bincount(flat_idx, length=E) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux

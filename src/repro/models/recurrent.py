@@ -1,0 +1,221 @@
+"""Recurrent blocks: RWKV6 (Finch) time/channel mix and Griffin RG-LRU.
+
+Design notes (TPU adaptation, DESIGN.md Sec. 5):
+  * WKV is a matrix-state linear recurrence. We run an outer scan over
+    chunks (boundary states are the only stored residuals) with a
+    checkpointed inner scan over steps — O(T/L) memory for training without
+    the exp-ratio overflow issues of the fully-parallel chunked form.
+  * RG-LRU is a diagonal linear recurrence -> jax.lax.associative_scan
+    (O(log T) depth, differentiable).
+Both have single-step forms for serving decode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import Params, _init, rms_norm
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 64
+
+
+def rwkv_tmix_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    nh = d // cfg.rwkv_head_dim
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.bfloat16),       # r,k,v,g,w shift mix
+        "wr": _init(ks[0], (d, d)),
+        "wk": _init(ks[1], (d, d)),
+        "wv": _init(ks[2], (d, d)),
+        "wg": _init(ks[3], (d, d)),
+        "wo": _init(ks[4], (d, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+        "w0": jnp.full((d,), -6.0, jnp.float32),          # base decay (log-log)
+        "w_lora_a": _init(ks[5], (d, RWKV_LORA), dtype=jnp.float32),
+        "w_lora_b": _init(ks[6], (RWKV_LORA, d), dtype=jnp.float32),
+        "u": _init(ks[7], (d,), scale=0.3, dtype=jnp.float32),   # bonus
+        "ln_x": jnp.ones((d,), jnp.float32),              # per-head groupnorm
+    }
+
+
+def _token_shift(x, prev):
+    """shift(x)_t = x_{t-1}; prev = last token of the previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_inputs(cfg: ModelConfig, p: Params, x, prev):
+    xs = _token_shift(x, prev)
+    mixed = [x + (xs - x) * p["mu"][i] for i in range(5)]
+    xr, xk, xv, xg, xw = mixed
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (the "Finch" contribution): w in (0,1) per channel
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + dd))                   # (B,T,d), fp32
+    return r, k, v, g, w
+
+
+def _wkv_step(state, rkvw):
+    """state: (B,H,N,N); r,k,v: (B,H,N); w: (B,H,N); u: (H,N) closure-free."""
+    r, k, v, w, u = rkvw
+    kv = k[..., :, None] * v[..., None, :]                # (B,H,N,N)
+    out = jnp.einsum("bhn,bhnm->bhm", r, state + u[..., :, None] * kv)
+    state = state * w[..., :, None] + kv
+    return state, out
+
+
+def wkv_scan(r, k, v, w, u, state0, chunk: int = 64):
+    """Chunked, checkpointed WKV recurrence.
+
+    r,k,v,w: (B, T, H, N) fp32; u: (H, N); state0: (B, H, N, N).
+    Returns out (B, T, H, N), state_T.
+    """
+    B, T, H, N = r.shape
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nC = (T + pad) // L
+    # (B, nC, L, H, N) -> (nC, L, B, H, N)
+    resh = lambda a: jnp.moveaxis(a.reshape(B, nC, L, H, N), 0, 2)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    @jax.checkpoint
+    def chunk_fn(state, xs):
+        rs, ks, vs, ws = xs        # (L, B, H, N)
+        def step(s, t):
+            return _wkv_step(s, (rs[t], ks[t], vs[t], ws[t], u))
+        state, outs = lax.scan(step, state, jnp.arange(L))
+        return state, outs
+
+    state, outs = lax.scan(chunk_fn, state0, (rc, kc, vc, wc))
+    # (nC, L, B, H, N) -> (B, T, H, N)
+    out = jnp.moveaxis(outs.reshape(nC * L, B, H, N), 1, 0)[:, :T]
+    return out, state
+
+
+def rwkv_tmix_apply(cfg: ModelConfig, p: Params, x, prev_x, state0):
+    """x: (B,T,d). Returns (y, (last_x, state_T))."""
+    B, T, d = x.shape
+    H, N = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    r, k, v, g, w = _rwkv_inputs(cfg, p, x, prev_x)
+    shp = lambda a: a.astype(jnp.float32).reshape(B, T, H, N)
+    u = p["u"].reshape(H, N)
+    out, state = wkv_scan(shp(r), shp(k), shp(v), w.reshape(B, T, H, N),
+                          u, state0)
+    out = out.reshape(B, T, d)
+    # per-head group norm, then gate
+    out = out.reshape(B, T, H, N)
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * lax.rsqrt(var + 64e-5)
+    out = out.reshape(B, T, d) * p["ln_x"]
+    y = (out.astype(x.dtype) * g) @ p["wo"]
+    return y, (x[:, -1, :], state)
+
+
+def rwkv_cmix_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    ff = int(3.5 * d)
+    k1, k2 = jax.random.split(key)
+    return {"mu": jnp.full((2, d), 0.5, jnp.bfloat16),
+            "w_up": _init(k1, (d, ff)),
+            "w_down": _init(k2, (ff, d),
+                            scale=0.02 / math.sqrt(2 * cfg.n_layers))}
+
+
+def rwkv_cmix_apply(cfg: ModelConfig, p: Params, x, prev_x):
+    xs = _token_shift(x, prev_x)
+    xk = x + (xs - x) * p["mu"][0]
+    h = jnp.square(jax.nn.relu(xk @ p["w_up"]))
+    return h @ p["w_down"], x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Griffin RG-LRU block
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": _init(ks[0], (d, d)),           # gelu branch
+        "w_in": _init(ks[1], (d, d)),             # recurrent branch
+        "conv_w": _init(ks[2], (cfg.rglru_conv_width, d), scale=0.1),
+        "conv_b": jnp.zeros((d,), jnp.bfloat16),
+        "w_a": _init(ks[3], (d, d), dtype=jnp.float32),   # recurrence gate
+        "w_x": _init(ks[4], (d, d), dtype=jnp.float32),   # input gate
+        "lam": jnp.full((d,), 3.0, jnp.float32),          # a = sigmoid(lam)
+        "w_out": _init(ks[5], (d, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv1d(u, w, b, carry=None):
+    """u: (B,T,d); w: (W,d) depthwise. carry: (B,W-1,d) previous inputs."""
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([carry, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(W)) + b
+    return out, up[:, -(W - 1):, :]
+
+
+def _rglru_gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"])
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lam"])      # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    gated = i * uf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_apply(cfg: ModelConfig, p: Params, x, h0=None, conv_carry=None):
+    """Full-sequence Griffin recurrent block. Returns (y, (h_T, conv_carry))."""
+    B, T, d = x.shape
+    gate = jax.nn.gelu((x @ p["w_gate"]), approximate=True)
+    u = x @ p["w_in"]
+    u, conv_carry = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_carry)
+    a, b = _rglru_gates(p, u)
+    if h0 is not None:
+        # fold h0 into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate.astype(jnp.float32) * hh) @ p["w_out"].astype(jnp.float32)
+    return y.astype(x.dtype), (hh[:, -1, :], conv_carry)
+
+
+def rglru_decode_step(cfg: ModelConfig, p: Params, x, h, conv_carry):
+    """x: (B,1,d). Returns (y, (h', conv_carry'))."""
+    gate = jax.nn.gelu((x @ p["w_gate"]), approximate=True)
+    u = x @ p["w_in"]
+    u, conv_carry = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_carry)
+    a, b = _rglru_gates(p, u)
+    h = a[:, 0] * h + b[:, 0]
+    y = (gate[:, 0].astype(jnp.float32) * h) @ p["w_out"].astype(jnp.float32)
+    return y[:, None, :].astype(x.dtype), (h, conv_carry)

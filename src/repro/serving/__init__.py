@@ -1,0 +1,4 @@
+from .engine import Engine, Request
+from .sampler import SamplingParams, sample
+
+__all__ = ["Engine", "Request", "SamplingParams", "sample"]

@@ -1,0 +1,165 @@
+"""Serving engine: batched prefill + continuous-batching decode.
+
+Slot model (vLLM-style, static shapes for XLA):
+  * the engine owns `batch_size` slots and one cache pytree;
+  * prefill runs per admission wave (right-padded prompts, per-sequence
+    prompt_lens); finished slots are refilled by single-prompt prefill into
+    a fresh batch-1 cache that is scattered into the slot (jitted);
+  * decode advances all live slots every step (dead slots masked).
+
+Recurrent/hybrid archs (state pollution from right pads) are admitted in
+equal-length buckets — the scheduler handles that transparently.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .. import models
+from .sampler import SamplingParams, sample
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int,
+                 max_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = models.init_cache(cfg, batch_size, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_size
+        self.slot_budget = np.zeros(batch_size, np.int32)
+        self._prefill = jax.jit(
+            lambda p, t, c, l, f: models.prefill(cfg, p, t, c, frontend=f,
+                                                 prompt_lens=l))
+        self._decode = jax.jit(
+            lambda p, t, c: models.decode_step(cfg, p, t, c))
+        self._insert = jax.jit(self._insert_impl, static_argnames=("slot",))
+        self.stats = {"tokens_out": 0, "prefill_s": 0.0, "decode_s": 0.0,
+                      "steps": 0}
+
+    # ------------------------------------------------------------------
+    def _insert_impl(self, cache, one_cache, slot: int):
+        """Scatter a batch-1 cache into `slot` of the engine cache."""
+        def put(big, small):
+            if big.ndim == 0:
+                return big
+            # find the batch axis: the dim where shapes differ (B vs 1)
+            for ax in range(big.ndim):
+                if big.shape[ax] != small.shape[ax] and small.shape[ax] == 1:
+                    idx = [slice(None)] * big.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    return big.at[tuple(idx)].set(small)
+            return big
+        return jax.tree.map(put, cache, one_cache)
+
+    # ------------------------------------------------------------------
+    def admit_wave(self, requests: List[Request]):
+        """Prefill a wave of requests into free slots (right-padded)."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        wave = requests[:len(free)]
+        if not wave:
+            return []
+        t0 = time.perf_counter()
+        if all(r is None for r in self.slot_req):
+            # whole-batch prefill path
+            S = max(max(len(r.prompt) for r in wave), 1)
+            toks = np.zeros((self.B, S), np.int32)
+            lens = np.zeros((self.B,), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, :len(r.prompt)] = r.prompt
+                lens[i] = len(r.prompt)
+            lens = np.maximum(lens, 1)
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(lens), None)
+            first = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for i, r in enumerate(wave):
+                self._admit_slot(i, r, int(first[i]))
+        else:
+            # per-slot insertion
+            for slot, r in zip(free, wave):
+                one = models.init_cache(self.cfg, 1, self.max_len)
+                toks = jnp.asarray([r.prompt], jnp.int32)
+                lens = jnp.asarray([len(r.prompt)], jnp.int32)
+                logits, one = self._prefill(self.params, toks, one, lens,
+                                            None)
+                self.cache = self._insert(self.cache, one, slot=slot)
+                self._admit_slot(slot, r, int(np.asarray(jnp.argmax(logits[0]))))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        return wave
+
+    # ------------------------------------------------------------------
+    def _admit_slot(self, slot: int, r: Request, first_token: int):
+        """The prefill's first sampled token counts against the budget."""
+        r.output.append(first_token)
+        self.stats["tokens_out"] += 1
+        if (r.max_new_tokens <= 1
+                or (r.eos_id >= 0 and first_token == r.eos_id)):
+            r.done = True
+            self.slot_req[slot] = None
+            return
+        self.slot_req[slot] = r
+        self.slot_budget[slot] = r.max_new_tokens - 1
+
+    # ------------------------------------------------------------------
+    def decode_round(self):
+        """One decode step for all live slots."""
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return
+        t0 = time.perf_counter()
+        tok = np.zeros((self.B,), np.int32)
+        for i in live:
+            tok[i] = self.slot_req[i].output[-1]
+        logits, self.cache = self._decode(self.params, jnp.asarray(tok),
+                                          self.cache)
+        self.key, sub = jax.random.split(self.key)
+        nxt = np.asarray(sample(logits, sub,
+                                self.slot_req[live[0]].sampling), np.int32)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["steps"] += 1
+        for i in live:
+            r = self.slot_req[i]
+            r.output.append(int(nxt[i]))
+            self.stats["tokens_out"] += 1
+            self.slot_budget[i] -= 1
+            if (self.slot_budget[i] <= 0
+                    or (r.eos_id >= 0 and r.output[-1] == r.eos_id)):
+                r.done = True
+                self.slot_req[i] = None
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Offline serve: continuous batching until all requests finish."""
+        pending = list(requests)
+        submitted: List[Request] = []
+        while pending or any(r is not None for r in self.slot_req):
+            if pending:
+                wave = self.admit_wave(pending)
+                submitted += wave
+                pending = pending[len(wave):]
+            self.decode_round()
+        return submitted
+
+    def throughput(self) -> float:
+        tot = self.stats["prefill_s"] + self.stats["decode_s"]
+        return self.stats["tokens_out"] / tot if tot > 0 else 0.0

@@ -1,0 +1,32 @@
+"""Token samplers (greedy / temperature / top-k / top-p), pure JAX."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0       # 0 -> greedy
+    top_k: int = 0                 # 0 -> off
+    top_p: float = 1.0             # 1 -> off
+
+
+def sample(logits, key, params: SamplingParams):
+    """logits: (B, V) -> (B,) int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_ = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

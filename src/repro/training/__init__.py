@@ -1,0 +1,7 @@
+from .optimizer import AdamW, AdamWState, cosine_schedule, constant_schedule
+from .train_step import (TrainState, make_train_step, init_state,
+                         compress_grads, compress_int8, decompress_int8)
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule", "constant_schedule",
+           "TrainState", "make_train_step", "init_state", "compress_grads",
+           "compress_int8", "decompress_int8"]

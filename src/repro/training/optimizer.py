@@ -1,0 +1,88 @@
+"""AdamW + LR schedules, from scratch (no optax in this environment).
+
+Mixed precision: bf16 params in the model, fp32 master copy + moments in
+the optimizer state (ZeRO-shardable over the data axis, see
+distributed/sharding.opt_state_shardings).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: dict        # fp32 params
+    m: dict
+    v: dict
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        zeros = jax.tree.map(jnp.zeros_like, f32)
+        return AdamWState(jnp.zeros((), jnp.int32), f32, zeros,
+                          jax.tree.map(jnp.zeros_like, f32))
+
+    def update(self, grads, state: AdamWState, params):
+        """params: current model-dtype params (for the cast back).
+        Returns (new model-dtype params, new state, stats)."""
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(g32)) + 1e-20)
+        scale = jnp.minimum(1.0, self.clip_norm / gnorm)
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        lr = self.lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            p = p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                          + self.weight_decay * p * (p.ndim >= 2))
+            return p, m, v
+
+        flat_p, tdef = jax.tree.flatten(state.master)
+        flat_g = jax.tree.leaves(g32)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        cast = jax.tree.map(lambda p, old: p.astype(old.dtype), new_p, params)
+        new_state = AdamWState(step, new_p, new_m, new_v)
+        return cast, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)

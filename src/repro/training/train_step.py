@@ -1,0 +1,140 @@
+"""Training step: loss -> grad -> AdamW, with microbatch gradient
+accumulation and optional int8 error-feedback gradient compression for the
+cross-pod (DCN) all-reduce — a distributed-optimization trick beyond the
+paper (EXPERIMENTS.md §Perf).
+
+The remat policy is the scan-over-units checkpoint in models/lm.py; the
+step itself is pure and jit/pjit-friendly (all sharding comes from the
+in/out shardings the launcher attaches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .. import models
+from .optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+
+
+def compress_int8(g):
+    """Per-tensor int8 quantization (symmetric)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, error_feedback=None):
+    """int8 + error feedback; returns (compressed pytree, new residuals)."""
+    if error_feedback is None:
+        error_feedback = jax.tree.map(jnp.zeros_like, grads)
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress_int8(gf)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+    flat = jax.tree.map(one, grads, error_feedback)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return deq, res
+
+
+def _shard_microbatch(a):
+    """Constrain (n_mb, mb, ...) xs: mb dim over the DP axes (guarded)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        return a
+    if am is None or not am.shape:
+        return a
+    from jax.sharding import PartitionSpec as P
+    shape = dict(am.shape)
+    for axes in ((("pod", "data") if "pod" in shape else ("data",)),
+                 ("data",)):
+        axes = tuple(x for x in axes if x in shape)
+        if not axes:
+            continue
+        n = 1
+        for x in axes:
+            n *= shape[x]
+        if a.shape[1] % n == 0 and a.shape[1] >= n:
+            spec = [None, axes if len(axes) > 1 else axes[0]] \
+                + [None] * (a.ndim - 2)
+            return jax.lax.with_sharding_constraint(a, P(*spec))
+    return a
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, microbatches: int = 1,
+                    has_frontend: bool = False):
+    """Returns step(state, batch) -> (state, metrics). batch:
+    {tokens, targets, mask[, frontend]} with global-batch leading dim."""
+
+    def loss(params, tokens, targets, mask, frontend):
+        return models.loss_fn(cfg, params, tokens, targets, mask=mask,
+                              frontend=frontend)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(state: TrainState, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        frontend = batch.get("frontend") if has_frontend else None
+
+        if microbatches > 1:
+            # reshape to a leading microbatch axis and scan over it as xs —
+            # NEVER dynamic-slice along the sharded batch axis (GSPMD lowers
+            # that to collective-permute halo storms; §Perf iteration 4)
+            def to_mb(a):
+                if a is None:
+                    return None
+                a = a.reshape(microbatches, -1, *a.shape[1:])
+                return _shard_microbatch(a)
+
+            xs = tuple(to_mb(a) for a in (tokens, targets, mask, frontend))
+
+            def body(carry, mb):
+                acc, tot_loss = carry
+                t, tg, mk, fe = mb
+                (lv, met), g = grad_fn(state.params, t, tg, mk, fe)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                   acc, g)
+                return (acc, tot_loss + lv), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gacc, tot), _ = jax.lax.scan(body, (zeros, 0.0), xs)
+            grads = jax.tree.map(lambda g: g / microbatches, gacc)
+            lv = tot / microbatches
+            met = {}
+        else:
+            (lv, met), grads = grad_fn(state.params, tokens, targets, mask,
+                                       frontend)
+
+        new_params, new_opt, stats = opt.update(grads, state.opt,
+                                                state.params)
+        metrics = {"loss": lv, **stats}
+        metrics.update({k: v for k, v in met.items()})
+        return TrainState(new_params, new_opt), metrics
+
+    return step
+
+
+def init_state(cfg: ModelConfig, opt: AdamW, key) -> TrainState:
+    params = models.init_params(cfg, key)
+    return TrainState(params, opt.init(params))

@@ -1,0 +1,57 @@
+"""Area + cost model (paper Sec. III-D, Table II/IV)."""
+import pytest
+
+from repro.core import area, cost, hardware as hw
+
+
+def test_ga100_area_calibration():
+    """Paper Table IV: GA100 = 826 mm^2 (model output)."""
+    rep = area.device_area(hw.nvidia_ga100(), 600)
+    assert rep.total_mm2 == pytest.approx(826, rel=0.05)
+
+
+def test_table4_design_areas():
+    lat = area.device_area(hw.latency_oriented(), 600).total_mm2
+    thr = area.device_area(hw.throughput_oriented(), 600).total_mm2
+    assert lat == pytest.approx(478, rel=0.05)
+    assert thr == pytest.approx(787, rel=0.08)
+
+
+def test_area_reduction_claim():
+    """Paper: latency design reduces die area by 42.1%."""
+    ga = area.device_area(hw.nvidia_ga100(), 600).total_mm2
+    lat = area.device_area(hw.latency_oriented(), 600).total_mm2
+    assert 1 - lat / ga == pytest.approx(0.421, abs=0.03)
+
+
+def test_breakdown_sums_to_total():
+    rep = area.device_area(hw.nvidia_a100(), 600)
+    assert sum(rep.breakdown.values()) == pytest.approx(rep.total_mm2,
+                                                        rel=0.01)
+
+
+def test_bigger_systolic_bigger_lane():
+    a = area.lane_area(hw.compute_design("B"))
+    e = area.lane_area(hw.compute_design("E"))
+    assert e > 10 * a
+
+
+def test_cost_table4():
+    """Paper Table IV: $640 / $711 / $296 total device cost."""
+    for dev, paper in ((hw.latency_oriented(), 640),
+                       (hw.nvidia_ga100(), 711),
+                       (hw.throughput_oriented(), 296)):
+        rep = area.device_area(dev, 600)
+        c = cost.device_cost(dev, rep.total_mm2)
+        assert c.total_usd == pytest.approx(paper, rel=0.08)
+
+
+def test_dies_per_wafer_monotone():
+    assert cost.dies_per_wafer(100) > cost.dies_per_wafer(400) > \
+        cost.dies_per_wafer(800) > 0
+
+
+def test_hbm_vs_ddr_cost():
+    assert cost.memory_cost(hw.nvidia_ga100()) == pytest.approx(560, rel=0.01)
+    assert cost.memory_cost(hw.throughput_oriented()) == pytest.approx(
+        154, rel=0.01)

@@ -1,0 +1,116 @@
+"""Mapper + systolic model: unit and property tests (paper Sec. III-B1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hardware as hw
+from repro.core.mapper import matmul_perf, _tile_candidates
+from repro.core.systolic import gemm_cycles, gemm_cycles_array, utilization
+from repro.core.roofline import matmul_roofline
+
+A100 = hw.nvidia_a100()
+TPU = hw.google_tpu_v5e()
+
+
+def brute_force_cycles(m, k, n, rows, cols):
+    """Reference: explicit pass enumeration."""
+    total = 0
+    for r0 in range(0, m, rows):
+        for c0 in range(0, n, cols):
+            r_occ = min(rows, m - r0)
+            c_occ = min(cols, n - c0)
+            total += 2 * r_occ + c_occ + k - 2
+    return total
+
+
+@given(m=st.integers(1, 400), k=st.integers(1, 300), n=st.integers(1, 400))
+@settings(max_examples=60, deadline=None)
+def test_systolic_closed_form_matches_bruteforce(m, k, n):
+    assert gemm_cycles(m, k, n, 16, 16) == brute_force_cycles(m, k, n, 16, 16)
+
+
+def test_systolic_vectorized_matches_scalar():
+    ms = np.array([1, 16, 33, 128, 200])
+    ks = np.array([1, 7, 64, 128, 500])
+    ns = np.array([1, 16, 31, 256, 129])
+    vec = gemm_cycles_array(ms, ks, ns, 16, 16)
+    for i in range(len(ms)):
+        assert vec[i] == gemm_cycles(int(ms[i]), int(ks[i]), int(ns[i]),
+                                     16, 16)
+
+
+def test_systolic_utilization_bounds():
+    sa = A100.core.lane.systolic_array
+    # deep-k amortizes fill/drain; short-k pays it (paper Fig. 7 analysis)
+    assert 0.95 < utilization(128, 4096, 128, sa) <= 1.0
+    assert 0.7 < utilization(128, 128, 128, sa) < 0.8
+    assert utilization(1, 128, 128, sa) < 0.2
+
+
+@given(m=st.sampled_from([1, 16, 64, 512, 4096]),
+       k=st.sampled_from([64, 512, 12288]),
+       n=st.sampled_from([128, 3072, 12288]))
+@settings(max_examples=20, deadline=None)
+def test_mapper_never_beats_roofline(m, k, n):
+    """The paper's key criticism of rooflines: they're optimistic. Our
+    tile-level latency must never be below the roofline bound."""
+    r = matmul_perf(A100, m, k, n)
+    rf = matmul_roofline(A100, m, k, n)
+    assert r.latency >= rf.compute_s * 0.999
+    assert r.latency >= rf.memory_s * 0.35  # C-tile write-back may overlap
+
+
+def test_mapper_tiles_fit_buffers():
+    r = matmul_perf(A100, 4096, 12288, 3072)
+    mp = r.mapping
+    gb = (mp.tile_m * mp.tile_k + mp.tile_k * mp.tile_n
+          + mp.tile_m * mp.tile_n) * 2
+    if mp.double_buffer_l2:
+        gb *= 2
+    assert gb <= A100.global_buffer_bytes
+    lb = (mp.subtile_m * mp.subtile_k + mp.subtile_k * mp.subtile_n
+          + mp.subtile_m * mp.subtile_n) * 2
+    if mp.double_buffer_l1:
+        lb *= 2
+    assert lb <= A100.core.local_buffer_bytes
+    assert mp.subtile_m <= mp.tile_m
+    assert mp.subtile_n <= mp.tile_n
+
+
+def test_mapper_compute_bound_large_matmul():
+    r = matmul_perf(A100, 16384, 12288, 12288)
+    assert r.mapping.bound == "compute"
+    eff = r.flops / r.latency / A100.peak_matmul_flops
+    assert 0.5 < eff <= 1.0, f"MXU efficiency {eff}"
+
+
+def test_mapper_memory_bound_narrow_matmul():
+    """Decode-shape GEMM (paper: 16 x 12288) must be IO-bound."""
+    r = matmul_perf(A100, 16, 12288, 12288)
+    assert r.mapping.bound == "memory"
+
+
+def test_mapper_monotone_in_m():
+    lats = [matmul_perf(A100, m, 12288, 12288).latency
+            for m in (64, 256, 1024, 4096)]
+    assert all(b > a * 0.98 for a, b in zip(lats, lats[1:]))
+
+
+def test_mapper_batched_gqa_traffic():
+    """Batched (per-head) matmul reads the B operand once per batch."""
+    single = matmul_perf(A100, 2048, 128, 2048)
+    batched = matmul_perf(A100, 2048, 128, 2048, batch=8)
+    assert batched.main_memory_bytes > 7 * single.main_memory_bytes * 0.8
+    assert batched.latency > 4 * single.latency
+
+
+def test_tile_candidates_cover_dim():
+    c = _tile_candidates(1000, 16)
+    assert 1000 in c
+    assert all(x > 0 for x in c)
+
+
+def test_mapper_tpu_blocks_are_mxu_aligned():
+    from repro.kernels.matmul.ops import mapper_blocks
+    bm, bk, bn = mapper_blocks(4096, 4096, 4096)
+    assert bm % 128 == 0 and bk % 128 == 0 and bn % 128 == 0

@@ -1,0 +1,144 @@
+"""Per-arch smoke tests: reduced same-family configs, one forward / train
+step on CPU, shapes + finiteness + serving equivalence (assignment
+deliverable f)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro import models
+from repro.models.lm import padded_vocab
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B=2, S=16):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    fe = None
+    if models.needs_frontend(cfg):
+        fe = jax.random.normal(KEY, (B, 8, cfg.d_model), jnp.bfloat16)
+    return toks, fe
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(ARCHS[arch])
+    params = models.init_params(cfg, KEY)
+    toks, fe = _inputs(cfg)
+    logits, aux = jax.jit(
+        lambda p, t, f: models.forward(cfg, p, t, frontend=f))(params, toks, fe)
+    assert logits.shape == (2, 16, padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_decreases_loss_direction(arch):
+    """One SGD-ish step on the same batch must not blow up and the grads
+    must be finite and non-zero."""
+    cfg = smoke_config(ARCHS[arch])
+    params = models.init_params(cfg, KEY)
+    toks, fe = _inputs(cfg)
+    tg = jnp.roll(toks, -1, 1)
+    (lv, met), g = jax.jit(jax.value_and_grad(
+        lambda p: models.loss_fn(cfg, p, toks, tg, frontend=fe),
+        has_aux=True))(params, )
+    assert np.isfinite(float(lv))
+    gn = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32))))
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_matches_forward(arch):
+    cfg = smoke_config(ARCHS[arch])
+    params = models.init_params(cfg, KEY)
+    toks, fe = _inputs(cfg, S=16)
+    logits, _ = jax.jit(
+        lambda p, t, f: models.forward(cfg, p, t, frontend=f))(params, toks, fe)
+    cache = models.init_cache(cfg, 2, 32)
+    lg1, cache = jax.jit(
+        lambda p, t, c, f: models.prefill(cfg, p, t, c, frontend=f))(
+        params, toks[:, :-1], cache, fe)
+
+    def check(ref, got, tol):
+        if cfg.n_experts:
+            # MoE routing is a discrete boundary: the serving path's
+            # different accumulation order can flip near-tied top-k picks
+            # at random init, so compare decisions, not elementwise logits
+            agree = (ref.argmax(-1) == got.argmax(-1)).mean()
+            assert agree >= 0.99, f"argmax agreement {agree}"
+        else:
+            err = np.max(np.abs(ref - got)) / (np.max(np.abs(ref)) + 1e-9)
+            assert err < tol, err
+
+    check(np.asarray(logits[:, -2, :cfg.vocab_size], np.float32),
+          np.asarray(lg1[:, :cfg.vocab_size], np.float32), 0.05)
+    lg2, cache = jax.jit(
+        lambda p, t, c: models.decode_step(cfg, p, t, c))(
+        params, toks[:, -1], cache)
+    check(np.asarray(logits[:, -1, :cfg.vocab_size], np.float32),
+          np.asarray(lg2[:, :cfg.vocab_size], np.float32), 0.07)
+
+
+def test_unit_structure_covers_all_layers():
+    for arch, cfg0 in ARCHS.items():
+        cfg = ARCHS[arch]
+        unit, n_units, rem = models.unit_structure(cfg)
+        assert len(unit) * n_units + len(rem) == cfg.n_layers, arch
+
+
+def test_recurrentgemma_pattern():
+    cfg = ARCHS["recurrentgemma-2b"]
+    kinds = models.layer_kinds(cfg)
+    assert kinds[:3] == ["rglru", "rglru", "attn"]
+    unit, n_units, rem = models.unit_structure(cfg)
+    assert unit == ("rglru", "rglru", "attn") and n_units == 8
+    assert rem == ("rglru", "rglru")
+
+
+def test_vision_pattern():
+    cfg = ARCHS["llama-3.2-vision-11b"]
+    kinds = models.layer_kinds(cfg)
+    assert kinds[3] == "xattn" and kinds[8] == "xattn"
+    unit, n_units, rem = models.unit_structure(cfg)
+    assert n_units * len(unit) == 40 and not rem
+
+
+def test_param_counts_match_simulator():
+    """Simulator (configs.base) parameter accounting must match the
+    instantiated JAX trees (abstract, no allocation) within 2%."""
+    for arch, cfg in ARCHS.items():
+        abs_p = models.abstract_params(cfg)
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abs_p))
+        predicted = cfg.param_count()
+        # account for vocab padding in the actual tree
+        pad = padded_vocab(cfg) - cfg.vocab_size
+        actual -= pad * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        err = abs(actual - predicted) / predicted
+        assert err < 0.02, f"{arch}: sim {predicted} vs jax {actual}"
+
+
+def test_flash_attention_static_vs_streaming():
+    """Both drivers of the chunked attention agree."""
+    from repro.models.layers import flash_attention, attention_reference
+    q = jax.random.normal(KEY, (2, 70, 4, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 70, 2, 32), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 70, 2, 32), jnp.float32)
+    ref = attention_reference(q, k, v, causal=True)
+    for static in (True, False):
+        out = flash_attention(q, k, v, causal=True, chunk_q=32, chunk_k=32,
+                              static=static)
+        err = np.max(np.abs(np.asarray(out - ref, np.float32)))
+        assert err < 1e-4, f"static={static}"
+
+
+def test_flash_attention_window():
+    from repro.models.layers import flash_attention, attention_reference
+    q = jax.random.normal(KEY, (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 16), jnp.float32)
+    ref = attention_reference(q, k, v, causal=True, window=16)
+    out = flash_attention(q, k, v, causal=True, window=16, chunk_q=16,
+                          chunk_k=16, static=True)
+    assert np.max(np.abs(np.asarray(out - ref, np.float32))) < 1e-4

@@ -1,0 +1,91 @@
+"""Operator performance models (paper Sec. III-B3) + interconnect (III-B2)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hardware as hw
+from repro.core import operators as ops
+from repro.core import interconnect as net
+
+A100 = hw.nvidia_a100()
+
+
+def test_softmax_memory_bound_large():
+    r = ops.softmax(A100, 32768, 4096)
+    assert r.bound == "memory"
+    # bytes: online algorithm = 1 read (fits GB) + 1 write at minimum
+    assert r.main_memory_bytes >= 32768 * 4096 * 4
+
+
+def test_layernorm_extreme_reduction_slows():
+    """Fig. 5d: throughput drops at extreme reduction dims."""
+    per_byte_fast = ops.layernorm(A100, 8192, 4096).latency / (8192 * 4096)
+    per_byte_slow = ops.layernorm(A100, 8, 4 << 20).latency / (8 * (4 << 20))
+    assert per_byte_slow > per_byte_fast * 1.2
+
+
+def test_tiny_op_is_overhead_bound():
+    r = ops.gelu(A100, 128)
+    assert r.bound == "overhead"
+    assert r.latency >= A100.kernel_launch_overhead_s
+
+
+def test_op_add_combines():
+    a = ops.gelu(A100, 1 << 20)
+    b = ops.softmax(A100, 1024, 1024)
+    c = a + b
+    assert c.latency == pytest.approx(a.latency + b.latency)
+    assert c.flops == a.flops + b.flops
+
+
+@given(n=st.integers(1, 1 << 28))
+@settings(max_examples=30, deadline=None)
+def test_latency_positive_and_finite(n):
+    r = ops.gelu(A100, n)
+    assert 0 < r.latency < 10.0
+
+
+# ---------------- interconnect ----------------
+
+def test_link_framing_overhead():
+    """Eq. 2: n_hat > n by the flit-per-payload framing factor."""
+    link = hw.Link(bandwidth_bytes=600e9)
+    t_raw = 1e6 / 600e9
+    t = net.link_time(link, 1e6)
+    assert t > t_raw
+    # framing: 16B flit per 256B payload = 6.25% overhead
+    assert t - link.latency_s - link.overhead_s == pytest.approx(
+        t_raw * (1 + 16 / 256), rel=0.01)
+
+
+def test_ring_allreduce_busbw_optimal():
+    """Large-message ring all-reduce approaches 2(n-1)/n algorithmic bw."""
+    sys4 = hw.dgx_a100(4)
+    n_bytes = 1 << 30
+    r = net.all_reduce(sys4, n_bytes)
+    algo_bytes = 2 * (4 - 1) / 4 * n_bytes
+    busbw = algo_bytes / r.latency
+    assert busbw == pytest.approx(600e9 / (1 + 16 / 256), rel=0.1)
+
+
+def test_allreduce_zero_on_one_device():
+    sys1 = hw.dgx_a100(1)
+    assert net.all_reduce(sys1, 1 << 20).latency == 0.0
+
+
+@given(n=st.sampled_from([2, 4, 8, 16]), mb=st.integers(1, 512))
+@settings(max_examples=20, deadline=None)
+def test_reduce_scatter_plus_allgather_close_to_allreduce(n, mb):
+    sys_ = hw.make_system(hw.nvidia_a100(), n)
+    bytes_ = mb * (1 << 20)
+    ar = net.all_reduce(sys_, bytes_).latency
+    rs = net.reduce_scatter(sys_, bytes_).latency
+    ag = net.all_gather(sys_, bytes_).latency
+    assert rs + ag == pytest.approx(ar, rel=0.25)
+
+
+def test_latency_term_dominates_small_messages():
+    sys4 = hw.dgx_a100(4)
+    r = net.all_reduce(sys4, 64)
+    assert r.latency >= 2 * 3 * sys4.link.latency_s

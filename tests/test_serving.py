@@ -1,0 +1,104 @@
+"""Serving engine: batched generation, continuous batching slot refill,
+sampler behavior."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro import models
+from repro.serving import Engine, Request, SamplingParams, sample
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    params = models.init_params(cfg, KEY)
+    return cfg, params
+
+
+def test_engine_offline_batch(dense_setup):
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, batch_size=4, max_len=64)
+    reqs = [Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=5)
+            for i in range(4)]
+    done = eng.run(reqs)
+    assert len(done) == 4
+    for r in done:
+        assert r.done and len(r.output) == 5
+        assert all(0 <= t < models.lm.padded_vocab(cfg) for t in r.output)
+    assert eng.stats["tokens_out"] >= 16
+
+
+def test_engine_continuous_batching_refill(dense_setup):
+    """More requests than slots: finished slots must be refilled."""
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, batch_size=2, max_len=64)
+    reqs = [Request(uid=i, prompt=[i + 1, 5], max_new_tokens=3)
+            for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5 and all(r.done for r in done)
+
+
+def test_engine_greedy_matches_step_by_step(dense_setup):
+    """Engine generation for one request == manual prefill+decode loop."""
+    cfg, params = dense_setup
+    prompt = [3, 1, 4, 1, 5]
+    eng = Engine(cfg, params, batch_size=1, max_len=64)
+    [req] = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=4)])
+
+    cache = models.init_cache(cfg, 1, 64)
+    lg, cache = models.prefill(cfg, params, jnp.asarray([prompt]), cache)
+    toks = [int(jnp.argmax(lg[0]))]
+    for _ in range(3):
+        lg, cache = models.decode_step(cfg, params,
+                                       jnp.asarray([toks[-1]]), cache)
+        toks.append(int(jnp.argmax(lg[0])))
+    assert req.output == toks
+
+
+def test_engine_eos_stops(dense_setup):
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64)
+    # every token is "eos": generation must stop after the first one
+    cache = models.init_cache(cfg, 1, 64)
+    lg, _ = models.prefill(cfg, params, jnp.asarray([[1, 2]]), cache)
+    eos = int(jnp.argmax(lg[0]))
+    [req] = eng.run([Request(uid=0, prompt=[1, 2], max_new_tokens=10,
+                             eos_id=eos)])
+    assert req.done and len(req.output) == 1
+
+
+def test_engine_recurrent_arch():
+    cfg = smoke_config(ARCHS["recurrentgemma-2b"])
+    params = models.init_params(cfg, KEY)
+    eng = Engine(cfg, params, batch_size=2, max_len=64)
+    reqs = [Request(uid=i, prompt=[1, 2, 3], max_new_tokens=4)
+            for i in range(2)]
+    done = eng.run(reqs)
+    assert all(r.done and len(r.output) == 4 for r in done)
+
+
+# ---------------- sampler ----------------
+
+def test_sampler_greedy():
+    logits = jnp.array([[0.0, 5.0, 1.0]])
+    assert int(sample(logits, KEY, SamplingParams())[0]) == 1
+
+
+def test_sampler_topk_restricts():
+    logits = jnp.array([[10.0, 9.0, -50.0, -50.0]])
+    for seed in range(20):
+        t = int(sample(logits, jax.random.PRNGKey(seed),
+                       SamplingParams(temperature=1.0, top_k=2))[0])
+        assert t in (0, 1)
+
+
+def test_sampler_topp_restricts():
+    logits = jnp.array([[10.0, 1.0, 0.5, 0.1]])
+    for seed in range(20):
+        t = int(sample(logits, jax.random.PRNGKey(seed),
+                       SamplingParams(temperature=1.0, top_p=0.5))[0])
+        assert t == 0
