@@ -1,6 +1,8 @@
 """LLMCompass core: the papers contribution as a composable library."""
 from . import hardware, systolic, mapper, operators, interconnect
+from . import ir, evaluator
 from . import area, cost, graph, inference_model, planner, roofline
 
 __all__ = ["hardware", "systolic", "mapper", "operators", "interconnect",
+           "ir", "evaluator",
            "area", "cost", "graph", "inference_model", "planner", "roofline"]

@@ -1,0 +1,207 @@
+"""Evaluator: turn symbolic Graphs (ir.py) into latencies on a System.
+
+One Evaluator owns one System and one result cache keyed by OpSpec. Because
+specs are hashable values, any spec — a matmul shape, a softmax extent, a
+collective volume — is evaluated at most once per Evaluator lifetime, no
+matter how many plans, KV depths, or repeated layers reference it. Share one
+Evaluator across a whole planner sweep and plan #2 onward pays only for
+shapes it has not seen (DESIGN.md §3).
+
+Matmuls additionally batch: `evaluate_many` first collects every unique
+un-cached MatmulSpec across all requested graphs and solves them in one
+stacked mapper search (mapper.matmul_perf_batch) before assembling per-graph
+results. The decode-KV trapezoid sweep and a multi-plan ranking both become
+a single batched search this way.
+
+Numbers are bit-for-bit identical to the seed eager path: each spec kind
+dispatches to the same operators.py / interconnect.py model the eager code
+called, and node repeat counts multiply results exactly the way the seed
+model_ops multiplied per-op costs by the layer count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Sequence
+
+from .hardware import Device, Link, System
+from . import operators as ops
+from . import interconnect as net
+from .ir import (CollectiveSpec, ElementwiseSpec, Graph, MatmulSpec, NormSpec,
+                 OpSpec, ScanSpec, SoftmaxSpec, TrafficSpec)
+from .mapper import matmul_perf_batch
+
+
+@dataclass
+class EvalStats:
+    """Cache / search statistics for one Evaluator (reported by benchmarks)."""
+    graphs: int = 0
+    nodes: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    matmul_searches: int = 0         # unique GEMM shapes actually searched
+    batched_searches: int = 0        # matmul_perf_batch invocations
+    candidates_searched: int = 0     # dense-equivalent candidate count
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def summary(self) -> str:
+        return (f"graphs={self.graphs} nodes={self.nodes} "
+                f"hits={self.cache_hits} misses={self.cache_misses} "
+                f"hit_rate={self.hit_rate:.1%} "
+                f"matmul_searches={self.matmul_searches} "
+                f"batched_calls={self.batched_searches} "
+                f"candidates={self.candidates_searched}")
+
+
+def _single_device_system(device: Device) -> System:
+    return System(device=device, device_count=1, link=Link(1e9))
+
+
+class Evaluator:
+    """Evaluate IR graphs on one System, deduplicating and batching work."""
+
+    def __init__(self, system: System, batch_matmuls: bool = True,
+                 use_reference_mapper: bool = False) -> None:
+        self._device_only = isinstance(system, Device)
+        if self._device_only:   # device-only use: no real link parameters
+            system = _single_device_system(system)
+        self.system = system
+        self.device = system.device
+        self.batch_matmuls = batch_matmuls
+        # seed-replica mode for before/after benchmarking: per-shape dense
+        # search (mapper.matmul_perf_reference), no batching, no global memo
+        self.use_reference_mapper = use_reference_mapper
+        if use_reference_mapper:
+            self.batch_matmuls = False
+        self._cache: Dict[OpSpec, ops.OpResult] = {}
+        self.stats = EvalStats()
+
+    # ------------------------------------------------------------------
+    def _eval_spec(self, spec: OpSpec) -> ops.OpResult:
+        """Evaluate one spec eagerly through the operator models."""
+        dev = self.device
+        if isinstance(spec, MatmulSpec):
+            self.stats.matmul_searches += 1
+            if self.use_reference_mapper:
+                from .mapper import matmul_perf_reference
+                r = matmul_perf_reference(dev, spec.m, spec.k, spec.n,
+                                          spec.batch, spec.bytes_in,
+                                          spec.bytes_out, spec.b_shared)
+            else:
+                self.stats.batched_searches += 1
+                r = matmul_perf_batch(dev, [(spec.m, spec.k, spec.n,
+                                             spec.batch, spec.bytes_in,
+                                             spec.bytes_out,
+                                             spec.b_shared)])[0]
+            self.stats.candidates_searched += r.candidates_searched
+            return ops.OpResult("matmul", r.latency
+                                + dev.kernel_launch_overhead_s, r.flops,
+                                r.main_memory_bytes, r.mapping.bound,
+                                r.mapping)
+        if isinstance(spec, SoftmaxSpec):
+            return ops.softmax(dev, spec.rows, spec.cols, spec.bytes_in,
+                               spec.bytes_out)
+        if isinstance(spec, NormSpec):
+            fn = ops.layernorm if spec.kind == "layernorm" else ops.rmsnorm
+            return fn(dev, spec.rows, spec.cols, spec.bytes_in, spec.bytes_out)
+        if isinstance(spec, ElementwiseSpec):
+            if spec.kind == "gelu":
+                return ops.gelu(dev, spec.n_elements, spec.bytes_elt,
+                                spec.bytes_elt)
+            if spec.kind == "silu_mul":
+                return ops.silu_mul(dev, spec.n_elements, spec.bytes_elt,
+                                    spec.bytes_elt)
+            return ops.elementwise(dev, spec.n_elements, spec.flops_per_elt,
+                                   spec.n_in, spec.bytes_elt)
+        if isinstance(spec, ScanSpec):
+            return ops.recurrent_scan(dev, spec.seq, spec.batch, spec.d_state,
+                                      spec.flops_per_step, spec.bytes_io,
+                                      spec.chunk)
+        if isinstance(spec, CollectiveSpec):
+            if self._device_only:
+                raise ValueError(
+                    "this Evaluator was built from a bare Device and has no "
+                    "link model; construct it with a System to price "
+                    f"collectives (got {spec.kind})")
+            n = spec.n_devices or self.system.device_count
+            fn = {"all_reduce": net.all_reduce,
+                  "reduce_scatter": net.reduce_scatter,
+                  "all_gather": net.all_gather,
+                  "all_to_all": net.all_to_all}.get(spec.kind)
+            if fn is not None:
+                return fn(self.system, spec.n_bytes, n)
+            if spec.kind == "p2p":
+                return net.p2p(self.system, spec.n_bytes)
+            raise ValueError(f"unknown collective kind {spec.kind!r}")
+        if isinstance(spec, TrafficSpec):
+            return ops.memory_traffic(dev, spec.n_bytes)
+        raise TypeError(f"cannot evaluate spec of type {type(spec).__name__}")
+
+    def _lookup(self, spec: OpSpec) -> ops.OpResult:
+        r = self._cache.get(spec)
+        if r is None:
+            self.stats.cache_misses += 1
+            r = self._eval_spec(spec)
+            self._cache[spec] = r
+        else:
+            self.stats.cache_hits += 1
+        return r
+
+    def _prefetch_matmuls(self, graphs: Sequence[Graph]) -> set:
+        """Solve every un-cached unique MatmulSpec in one stacked search.
+        Returns the set of specs filled in (already counted as misses)."""
+        pending: List[MatmulSpec] = []
+        seen = set()
+        for g in graphs:
+            for node in g:
+                s = node.spec
+                if isinstance(s, MatmulSpec) and s not in self._cache \
+                        and s not in seen:
+                    seen.add(s)
+                    pending.append(s)
+        if not pending:
+            return seen
+        dev = self.device
+        shapes = [(s.m, s.k, s.n, s.batch, s.bytes_in, s.bytes_out, s.b_shared)
+                  for s in pending]
+        results = matmul_perf_batch(dev, shapes)
+        self.stats.batched_searches += 1
+        for s, r in zip(pending, results):
+            self.stats.matmul_searches += 1
+            self.stats.candidates_searched += r.candidates_searched
+            self.stats.cache_misses += 1
+            self._cache[s] = ops.OpResult(
+                "matmul", r.latency + dev.kernel_launch_overhead_s, r.flops,
+                r.main_memory_bytes, r.mapping.bound, r.mapping)
+        return seen
+
+    # ------------------------------------------------------------------
+    def evaluate(self, graph: Graph) -> "LayerCost":
+        return self.evaluate_many([graph])[0]
+
+    def evaluate_many(self, graphs: Sequence[Graph]) -> List["LayerCost"]:
+        """Evaluate several graphs; unique matmuls across ALL of them are
+        solved in one batched mapper search first."""
+        from .graph import LayerCost      # late import: graph builds on ir
+        prefetched = self._prefetch_matmuls(graphs) if self.batch_matmuls \
+            else set()
+        out = []
+        for g in graphs:
+            self.stats.graphs += 1
+            cost = LayerCost()
+            for node in g:
+                self.stats.nodes += 1
+                if node.spec in prefetched:
+                    prefetched.discard(node.spec)   # first use = the miss
+                    r = self._cache[node.spec]
+                else:
+                    r = self._lookup(node.spec)
+                cost.add(ops.OpResult(
+                    node.name, r.latency * node.repeat,
+                    r.flops * node.repeat,
+                    r.main_memory_bytes * node.repeat, r.bound, r.mapping))
+            out.append(cost)
+        return out

@@ -1,13 +1,21 @@
-"""LLM computational graph -> operator calls (paper Fig. 2 + Sec. III-B).
+"""LLM computational graph -> symbolic op-IR (paper Fig. 2 + Sec. III-B).
 
-Builds the per-layer operator list for any ModelConfig at a given stage
+Builds the per-layer operator graph for any ModelConfig at a given stage
 (prefill: seq=S; decode: seq=1 with KV length), already divided by the
 parallelism plan (tp / ep), including the Megatron-style collectives the
 paper models (two all-reduce per transformer layer under TP) plus the
 all-to-all that MoE expert parallelism adds (our extension, DESIGN.md §5).
+
+The builders (`build_layer`, `build_model`) are *symbolic*: they emit
+ir.Graph values of hashable OpSpec nodes and never touch a Device, so one
+build can be evaluated on any hardware description — and the evaluator can
+deduplicate identical specs across a whole design-space sweep. Identical
+transformer layers become one node x `repeat` instead of n_layers nodes.
+`layer_ops` / `model_ops` remain as eager conveniences: build + evaluate.
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -15,7 +23,8 @@ from typing import List, Optional
 from ..configs.base import ModelConfig
 from .hardware import Device, System
 from . import operators as ops
-from . import interconnect as net
+from .ir import (CollectiveSpec, ElementwiseSpec, Graph, GraphBuilder,
+                 MatmulSpec, NormSpec, ScanSpec, SoftmaxSpec, TrafficSpec)
 
 
 @dataclass(frozen=True)
@@ -64,188 +73,171 @@ class LayerCost:
         return out
 
 
-def _norm(cfg: ModelConfig, dev: Device, rows: int, name: str) -> ops.OpResult:
-    fn = ops.layernorm if cfg.norm == "layernorm" else ops.rmsnorm
-    return fn(dev, rows, cfg.d_model, name=name)
+# ---------------------------------------------------------------------------
+# symbolic builders
+# ---------------------------------------------------------------------------
+
+def _norm_spec(cfg: ModelConfig, rows: int) -> NormSpec:
+    kind = "layernorm" if cfg.norm == "layernorm" else "rmsnorm"
+    return NormSpec(kind, rows, cfg.d_model)
 
 
-def _tp_collective(cfg: ModelConfig, system: System, plan: Plan,
-                   tokens: int, name: str) -> ops.OpResult:
+def _add_tp_collective(g: GraphBuilder, cfg: ModelConfig, plan: Plan,
+                       tokens: int, name: str) -> None:
     """Per-layer activation synchronization under tensor parallelism."""
     if plan.tp <= 1:
-        return ops.ZERO
+        return
     bytes_ = tokens * cfg.d_model * 2
     if plan.sequence_parallel:
-        rs = net.reduce_scatter(system, bytes_, plan.tp, name=name + "_rs")
-        ag = net.all_gather(system, bytes_, plan.tp, name=name + "_ag")
-        return rs + ag
-    return net.all_reduce(system, bytes_, plan.tp, name=name)
+        g.add(CollectiveSpec("reduce_scatter", bytes_, plan.tp), name + "_rs")
+        g.add(CollectiveSpec("all_gather", bytes_, plan.tp), name + "_ag")
+        return
+    g.add(CollectiveSpec("all_reduce", bytes_, plan.tp), name)
 
 
-def attention_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
-                  seq: int, kv_len: int, cross_len: int = 0,
-                  prefix: str = "") -> List[ops.OpResult]:
+def build_attention(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
+                    kv_len: int, cross_len: int = 0,
+                    prefix: str = "") -> Graph:
     """Self- (or cross-) attention block. seq = query length (1 for decode)."""
-    dev = system.device
     d, dh = cfg.d_model, cfg.d_head
     hq = max(1, cfg.n_heads // plan.tp)
     hkv = max(1, cfg.n_kv_heads // plan.tp)
-    g = hq // hkv
+    g_ = hq // hkv
     toks = batch * seq
-    out: List[ops.OpResult] = []
     ctx = cross_len if cross_len else kv_len
     win = cfg.attn_window
     kv_eff = min(ctx, win) if (win and not cross_len) else ctx
 
-    out.append(_norm(cfg, dev, toks, prefix + "ln_attn"))
-    out.append(ops.matmul(dev, toks, d, (hq + 2 * hkv) * dh,
-                          name=prefix + "qkv_proj"))
+    g = GraphBuilder()
+    g.add(_norm_spec(cfg, toks), prefix + "ln_attn")
+    g.add(MatmulSpec(toks, d, (hq + 2 * hkv) * dh), prefix + "qkv_proj")
     if cfg.qk_norm:
-        out.append(ops.rmsnorm(dev, toks * (hq + hkv), dh, name=prefix + "qk_norm"))
+        g.add(NormSpec("rmsnorm", toks * (hq + hkv), dh), prefix + "qk_norm")
     if cfg.rope_fraction > 0:
-        out.append(ops.elementwise(dev, toks * (hq + hkv) * dh, 6.0,
-                                   name=prefix + "rope"))
+        g.add(ElementwiseSpec("generic", toks * (hq + hkv) * dh, 6.0),
+              prefix + "rope")
     if seq == 1:   # decode: append one token of KV
-        out.append(ops.memory_traffic(dev, batch * 2 * hkv * dh * 2,
-                                      name=prefix + "kv_append"))
-    out.append(ops.matmul(dev, g * seq, dh, kv_eff, batch=batch * hkv,
-                          name=prefix + "qk_t"))
-    out.append(ops.softmax(dev, batch * hq * seq, kv_eff, name=prefix + "softmax"))
-    out.append(ops.matmul(dev, g * seq, kv_eff, dh, batch=batch * hkv,
-                          name=prefix + "a_mul_v"))
-    out.append(ops.matmul(dev, toks, hq * dh, d, name=prefix + "o_proj"))
-    out.append(_tp_collective(cfg, system, plan, toks, prefix + "allreduce_attn"))
-    return out
+        g.add(TrafficSpec(batch * 2 * hkv * dh * 2), prefix + "kv_append")
+    g.add(MatmulSpec(g_ * seq, dh, kv_eff, batch=batch * hkv),
+          prefix + "qk_t")
+    g.add(SoftmaxSpec(batch * hq * seq, kv_eff), prefix + "softmax")
+    g.add(MatmulSpec(g_ * seq, kv_eff, dh, batch=batch * hkv),
+          prefix + "a_mul_v")
+    g.add(MatmulSpec(toks, hq * dh, d), prefix + "o_proj")
+    _add_tp_collective(g, cfg, plan, toks, prefix + "allreduce_attn")
+    return g.build()
 
 
-def mlp_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
-            seq: int) -> List[ops.OpResult]:
-    dev = system.device
+def build_mlp(cfg: ModelConfig, plan: Plan, batch: int, seq: int) -> Graph:
     d = cfg.d_model
     toks = batch * seq
-    out: List[ops.OpResult] = []
-    out.append(_norm(cfg, dev, toks, "ln_mlp"))
+    g = GraphBuilder()
+    g.add(_norm_spec(cfg, toks), "ln_mlp")
 
     if cfg.n_experts:
         e_local = max(1, cfg.n_experts // plan.ep)
-        out.append(ops.matmul(dev, toks, d, cfg.n_experts, name="router"))
+        g.add(MatmulSpec(toks, d, cfg.n_experts), "router")
         if plan.ep > 1:
             a2a = toks * cfg.top_k * d * 2
-            out.append(net.all_to_all(system, a2a, plan.ep, name="moe_dispatch"))
+            g.add(CollectiveSpec("all_to_all", a2a, plan.ep), "moe_dispatch")
         toks_e = math.ceil(toks * cfg.top_k / cfg.n_experts)
         ff = max(1, cfg.d_ff // plan.tp)
         n_up = 2 * ff if cfg.mlp_gated else ff
-        out.append(ops.matmul(dev, toks_e, d, n_up, batch=e_local,
-                              name="expert_up"))
-        act = ops.silu_mul if cfg.mlp_gated else ops.gelu
-        out.append(act(dev, toks_e * e_local * ff, name="expert_act"))
-        out.append(ops.matmul(dev, toks_e, ff, d, batch=e_local,
-                              name="expert_down"))
+        g.add(MatmulSpec(toks_e, d, n_up, batch=e_local), "expert_up")
+        act = "silu_mul" if cfg.mlp_gated else "gelu"
+        g.add(ElementwiseSpec(act, toks_e * e_local * ff), "expert_act")
+        g.add(MatmulSpec(toks_e, ff, d, batch=e_local), "expert_down")
         if plan.ep > 1:
-            out.append(net.all_to_all(system, toks * cfg.top_k * d * 2,
-                                      plan.ep, name="moe_combine"))
-        out.append(ops.elementwise(dev, toks * d, 2 * cfg.top_k, name="moe_mix"))
+            g.add(CollectiveSpec("all_to_all", toks * cfg.top_k * d * 2,
+                                 plan.ep), "moe_combine")
+        g.add(ElementwiseSpec("generic", toks * d, 2 * cfg.top_k), "moe_mix")
     else:
         ff = max(1, cfg.d_ff // plan.tp)
         if cfg.mlp_gated:
-            out.append(ops.matmul(dev, toks, d, 2 * ff, name="w1_gate_proj"))
-            out.append(ops.silu_mul(dev, toks * ff, name="act_mul"))
+            g.add(MatmulSpec(toks, d, 2 * ff), "w1_gate_proj")
+            g.add(ElementwiseSpec("silu_mul", toks * ff), "act_mul")
         else:
-            out.append(ops.matmul(dev, toks, d, ff, name="w1_proj"))
-            out.append(ops.gelu(dev, toks * ff, name="gelu"))
-        out.append(ops.matmul(dev, toks, ff, d, name="w2_proj"))
-    out.append(_tp_collective(cfg, system, plan, toks, "allreduce_mlp"))
-    return out
+            g.add(MatmulSpec(toks, d, ff), "w1_proj")
+            g.add(ElementwiseSpec("gelu", toks * ff), "gelu")
+        g.add(MatmulSpec(toks, ff, d), "w2_proj")
+    _add_tp_collective(g, cfg, plan, toks, "allreduce_mlp")
+    return g.build()
 
 
-def rwkv_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
-             seq: int) -> List[ops.OpResult]:
-    """RWKV6 time-mix + channel-mix (extension op: recurrent_scan)."""
-    dev = system.device
+def build_rwkv(cfg: ModelConfig, plan: Plan, batch: int, seq: int) -> Graph:
+    """RWKV6 time-mix + channel-mix (extension op: ScanSpec)."""
     d = cfg.d_model
     d_tp = max(1, d // plan.tp)
     dh = cfg.rwkv_head_dim
     toks = batch * seq
-    out = [ops.layernorm(dev, toks, d, name="ln_tmix")]
+    g = GraphBuilder()
+    g.add(NormSpec("layernorm", toks, d), "ln_tmix")
     for nm in ("r", "k", "v", "g", "w_lora"):
         n = d_tp if nm != "w_lora" else 64
-        out.append(ops.matmul(dev, toks, d, n, name=f"tmix_{nm}"))
-    out.append(ops.recurrent_scan(
-        dev, seq, batch, d_state=d_tp * dh,
-        flops_per_step=6.0 * d_tp * dh,
-        bytes_io=6 * toks * d_tp * 2, name="wkv_scan"))
-    out.append(ops.matmul(dev, toks, d_tp, d, name="tmix_out"))
+        g.add(MatmulSpec(toks, d, n), f"tmix_{nm}")
+    g.add(ScanSpec(seq, batch, d_state=d_tp * dh,
+                   flops_per_step=6.0 * d_tp * dh,
+                   bytes_io=6 * toks * d_tp * 2), "wkv_scan")
+    g.add(MatmulSpec(toks, d_tp, d), "tmix_out")
     if plan.tp > 1:
-        out.append(net.all_reduce(system, toks * d * 2, plan.tp,
-                                  name="allreduce_tmix"))
+        g.add(CollectiveSpec("all_reduce", toks * d * 2, plan.tp),
+              "allreduce_tmix")
     # channel mix
     ff = int(3.5 * d) // plan.tp
-    out.append(ops.layernorm(dev, toks, d, name="ln_cmix"))
-    out.append(ops.matmul(dev, toks, d, ff, name="cmix_up"))
-    out.append(ops.elementwise(dev, toks * ff, 3.0, name="relu_sq"))
-    out.append(ops.matmul(dev, toks, ff, d, name="cmix_down"))
+    g.add(NormSpec("layernorm", toks, d), "ln_cmix")
+    g.add(MatmulSpec(toks, d, ff), "cmix_up")
+    g.add(ElementwiseSpec("generic", toks * ff, 3.0), "relu_sq")
+    g.add(MatmulSpec(toks, ff, d), "cmix_down")
     if plan.tp > 1:
-        out.append(net.all_reduce(system, toks * d * 2, plan.tp,
-                                  name="allreduce_cmix"))
-    return out
+        g.add(CollectiveSpec("all_reduce", toks * d * 2, plan.tp),
+              "allreduce_cmix")
+    return g.build()
 
 
-def rglru_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
-              seq: int) -> List[ops.OpResult]:
+def build_rglru(cfg: ModelConfig, plan: Plan, batch: int, seq: int) -> Graph:
     """Griffin recurrent block: dual in-proj, short conv, RG-LRU scan."""
-    dev = system.device
     d = cfg.d_model
     d_tp = max(1, d // plan.tp)
     toks = batch * seq
-    out = [_norm(cfg, dev, toks, "ln_rec")]
-    out.append(ops.matmul(dev, toks, d, 2 * d_tp, name="rec_in_proj"))
-    out.append(ops.elementwise(dev, toks * d_tp, 2.0 * cfg.rglru_conv_width,
-                               name="conv1d"))
-    out.append(ops.recurrent_scan(
-        dev, seq, batch, d_state=d_tp,
-        flops_per_step=12.0 * d_tp,
-        bytes_io=4 * toks * d_tp * 2, name="rg_lru"))
-    out.append(ops.elementwise(dev, toks * d_tp, 4.0, name="gate_mul"))
-    out.append(ops.matmul(dev, toks, d_tp, d, name="rec_out_proj"))
-    out.append(_tp_collective(cfg, system, plan, toks, "allreduce_rec"))
-    return out
+    g = GraphBuilder()
+    g.add(_norm_spec(cfg, toks), "ln_rec")
+    g.add(MatmulSpec(toks, d, 2 * d_tp), "rec_in_proj")
+    g.add(ElementwiseSpec("generic", toks * d_tp,
+                          2.0 * cfg.rglru_conv_width), "conv1d")
+    g.add(ScanSpec(seq, batch, d_state=d_tp, flops_per_step=12.0 * d_tp,
+                   bytes_io=4 * toks * d_tp * 2), "rg_lru")
+    g.add(ElementwiseSpec("generic", toks * d_tp, 4.0), "gate_mul")
+    g.add(MatmulSpec(toks, d_tp, d), "rec_out_proj")
+    _add_tp_collective(g, cfg, plan, toks, "allreduce_rec")
+    return g.build()
 
 
-def layer_ops(cfg: ModelConfig, system: System, plan: Plan, layer: int,
-              batch: int, seq: int, kv_len: int) -> LayerCost:
+def build_layer(cfg: ModelConfig, plan: Plan, layer: int, batch: int,
+                seq: int, kv_len: int) -> Graph:
     kind = cfg.block_kind(layer)
-    cost = LayerCost()
     if kind == "rwkv":
-        for r in rwkv_ops(cfg, system, plan, batch, seq):
-            cost.add(r)
-        return cost
+        return build_rwkv(cfg, plan, batch, seq)
     if kind == "rglru":
-        for r in rglru_ops(cfg, system, plan, batch, seq):
-            cost.add(r)
-        for r in mlp_ops(cfg, system, plan, batch, seq):
-            cost.add(r)
-        return cost
-    for r in attention_ops(cfg, system, plan, batch, seq, kv_len):
-        cost.add(r)
+        return build_rglru(cfg, plan, batch, seq) \
+            + build_mlp(cfg, plan, batch, seq)
+    g = build_attention(cfg, plan, batch, seq, kv_len)
     if cfg.cross_attention or layer in cfg.cross_attn_layers:
-        for r in attention_ops(cfg, system, plan, batch, seq, kv_len,
-                               cross_len=max(cfg.n_frontend_tokens, 1),
-                               prefix="x_"):
-            cost.add(r)
-    for r in mlp_ops(cfg, system, plan, batch, seq):
-        cost.add(r)
-    return cost
+        g = g + build_attention(cfg, plan, batch, seq, kv_len,
+                                cross_len=max(cfg.n_frontend_tokens, 1),
+                                prefix="x_")
+    return g + build_mlp(cfg, plan, batch, seq)
 
 
-def model_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
-              seq: int, kv_len: int, include_head: bool = True) -> LayerCost:
-    """Whole-model cost: distinct layer kinds evaluated once and multiplied.
+@functools.lru_cache(maxsize=4096)
+def build_model(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
+                kv_len: int, include_head: bool = True) -> Graph:
+    """Whole-model graph: distinct layer kinds built once with repeat counts.
 
-    Layers of the same kind have identical cost — evaluate each kind once
-    (this is what makes simulating GPT-3 96 layers as cheap as one layer).
+    Layers of the same kind have identical cost — each kind becomes one set
+    of nodes x `repeat` (this is what makes simulating GPT-3's 96 layers as
+    cheap as one layer). The build is symbolic and cached: no operator model
+    runs until an Evaluator sees the graph.
     """
-    dev = system.device
-    total = LayerCost()
     kinds: dict = {}
     for i in range(cfg.n_layers):
         key = (cfg.block_kind(i),
@@ -257,31 +249,42 @@ def model_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
         key = (cfg.block_kind(i),
                cfg.cross_attention or i in cfg.cross_attn_layers)
         if key not in rep_layer:
-            rep_layer[key] = layer_ops(cfg, system, plan, i, batch, seq, kv_len)
+            rep_layer[key] = build_layer(cfg, plan, i, batch, seq, kv_len)
+    g = GraphBuilder()
     for key, cnt in layers_per_stage.items():
-        lc = rep_layer[key]
-        for o in lc.ops:
-            total.add(ops.OpResult(o.name, o.latency * cnt, o.flops * cnt,
-                                   o.main_memory_bytes * cnt, o.bound,
-                                   o.mapping))
+        g.extend(rep_layer[key].scaled(cnt))
     # encoder stack (whisper): runs once per request at prefill
     if cfg.n_encoder_layers and seq > 1:
         enc_len = max(cfg.n_frontend_tokens, 1)
-        enc = LayerCost()
-        for r in attention_ops(cfg, system, plan, batch, enc_len, enc_len):
-            enc.add(r)
-        for r in mlp_ops(cfg, system, plan, batch, enc_len):
-            enc.add(r)
-        for o in enc.ops:
-            total.add(ops.OpResult("enc_" + o.name,
-                                   o.latency * cfg.n_encoder_layers,
-                                   o.flops * cfg.n_encoder_layers,
-                                   o.main_memory_bytes * cfg.n_encoder_layers,
-                                   o.bound))
+        enc = build_attention(cfg, plan, batch, enc_len, enc_len) \
+            + build_mlp(cfg, plan, batch, enc_len)
+        g.extend(enc.scaled(cfg.n_encoder_layers, prefix="enc_"))
     if include_head:
         toks = batch * (seq if seq > 1 else 1)
-        total.add(ops.memory_traffic(dev, toks * cfg.d_model * 2, name="embed"))
-        total.add(_norm(cfg, dev, toks, "ln_final"))
-        total.add(ops.matmul(dev, toks, cfg.d_model,
-                             max(1, cfg.vocab_size // plan.tp), name="lm_head"))
-    return total
+        g.add(TrafficSpec(toks * cfg.d_model * 2), "embed")
+        g.add(_norm_spec(cfg, toks), "ln_final")
+        g.add(MatmulSpec(toks, cfg.d_model,
+                         max(1, cfg.vocab_size // plan.tp)), "lm_head")
+    return g.build()
+
+
+# ---------------------------------------------------------------------------
+# eager conveniences: build + evaluate (seed-compatible API)
+# ---------------------------------------------------------------------------
+
+def layer_ops(cfg: ModelConfig, system: System, plan: Plan, layer: int,
+              batch: int, seq: int, kv_len: int,
+              evaluator=None) -> LayerCost:
+    from .evaluator import Evaluator
+    ev = evaluator if evaluator is not None else Evaluator(system)
+    return ev.evaluate(build_layer(cfg, plan, layer, batch, seq, kv_len))
+
+
+def model_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
+              seq: int, kv_len: int, include_head: bool = True,
+              evaluator=None) -> LayerCost:
+    """Whole-model cost: build the symbolic graph and evaluate it."""
+    from .evaluator import Evaluator
+    ev = evaluator if evaluator is not None else Evaluator(system)
+    return ev.evaluate(build_model(cfg, plan, batch, seq, kv_len,
+                                   include_head))

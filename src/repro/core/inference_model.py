@@ -5,16 +5,24 @@ max batch under memory capacity, and throughput — for a System + ModelConfig
 + Plan. Pipeline parallelism follows the paper's description (sequential
 stage partitions; throughput multiplies by stages once the pipeline is full,
 latency gains nothing).
+
+All entry points build symbolic IR (graph.build_model) and evaluate it with
+an Evaluator; pass a shared `evaluator` to amortize the cost model across
+calls (the planner does this across its whole plan sweep). `generate`
+evaluates the prefill graph and every decode-KV trapezoid sample in ONE
+batched evaluation — the unique GEMM shapes of all sample points go through
+a single stacked mapper search.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional
 
 from ..configs.base import ModelConfig
+from .evaluator import Evaluator
 from .hardware import System
-from .graph import LayerCost, Plan, model_ops
+from .graph import LayerCost, Plan, build_model
 from . import interconnect as net
 
 
@@ -37,45 +45,78 @@ def _report(cost: LayerCost) -> PerfReport:
                       bound=cost.by_bound())
 
 
+def _evaluator(system: System, evaluator: Optional[Evaluator]) -> Evaluator:
+    if evaluator is None:
+        return Evaluator(system)
+    if evaluator.system != system:
+        raise ValueError(
+            f"evaluator was built for {evaluator.system.device.name} x"
+            f"{evaluator.system.device_count} but this call targets "
+            f"{system.device.name} x{system.device_count}; memoized results "
+            f"would price the wrong hardware")
+    return evaluator
+
+
+def _pp_fill(system: System, plan: Plan, tokens: int, d_model: int) -> float:
+    """Pipeline fill: (pp-1) p2p activation hand-offs for the first batch."""
+    if plan.pp <= 1:
+        return 0.0
+    return net.p2p(system, tokens * d_model * 2).latency * (plan.pp - 1)
+
+
 def prefill(system: System, cfg: ModelConfig, plan: Plan, batch: int,
-            seq: int) -> PerfReport:
-    cost = model_ops(cfg, system, plan, batch, seq, kv_len=seq)
+            seq: int, evaluator: Optional[Evaluator] = None) -> PerfReport:
+    ev = _evaluator(system, evaluator)
+    cost = ev.evaluate(build_model(cfg, plan, batch, seq, kv_len=seq))
     rep = _report(cost)
-    if plan.pp > 1:   # pipeline fill: stage latency x pp for the first batch
-        rep.latency += net.p2p(system, batch * seq * cfg.d_model * 2).latency \
-            * (plan.pp - 1)
+    rep.latency += _pp_fill(system, plan, batch * seq, cfg.d_model)
     return rep
 
 
 def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
-                kv_len: int) -> PerfReport:
-    cost = model_ops(cfg, system, plan, batch, seq=1, kv_len=kv_len)
+                kv_len: int,
+                evaluator: Optional[Evaluator] = None) -> PerfReport:
+    ev = _evaluator(system, evaluator)
+    cost = ev.evaluate(build_model(cfg, plan, batch, seq=1, kv_len=kv_len))
     rep = _report(cost)
-    if plan.pp > 1:
-        rep.latency += net.p2p(system, batch * cfg.d_model * 2).latency \
-            * (plan.pp - 1)
+    rep.latency += _pp_fill(system, plan, batch, cfg.d_model)
     return rep
 
 
 def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
-             in_len: int, out_len: int, samples: int = 8) -> PerfReport:
+             in_len: int, out_len: int, samples: int = 8,
+             evaluator: Optional[Evaluator] = None) -> PerfReport:
     """prefill + out_len decode steps; decode latency integrated over the
-    growing KV with `samples` trapezoid points (exact enough, hugely faster)."""
-    pf = prefill(system, cfg, plan, batch, in_len)
-    total = pf.latency
-    flops, bytes_ = pf.flops, pf.bytes
+    growing KV with `samples` trapezoid points (exact enough, hugely faster).
+
+    The prefill graph and all `samples` decode graphs are evaluated in one
+    batched call: their unique GEMM shapes share a single mapper search.
+    """
+    ev = _evaluator(system, evaluator)
     pts = [in_len + round(i * (out_len - 1) / max(samples - 1, 1))
            for i in range(samples)]
-    lats = [decode_step(system, cfg, plan, batch, kv).latency for kv in pts]
+    graphs = [build_model(cfg, plan, batch, in_len, kv_len=in_len)] + \
+        [build_model(cfg, plan, batch, seq=1, kv_len=kv) for kv in pts]
+    costs = ev.evaluate_many(graphs)
+
+    pf = _report(costs[0])
+    pf.latency += _pp_fill(system, plan, batch * in_len, cfg.d_model)
+    dec_fill = _pp_fill(system, plan, batch, cfg.d_model)
+    lats = [c.latency + dec_fill for c in costs[1:]]
+
+    total = pf.latency
+    flops, bytes_ = pf.flops, pf.bytes
     dec = 0.0
     for i in range(samples - 1):
-        w = pts[i + 1] - pts[i] if i < samples - 2 else out_len - 1 - (pts[i] - in_len)
+        w = pts[i + 1] - pts[i] if i < samples - 2 \
+            else out_len - 1 - (pts[i] - in_len)
         dec += (lats[i] + lats[i + 1]) / 2 * max(w, 0)
     if out_len == 1:
         dec = 0.0
     total += dec + lats[0]      # +1 first token
     rep = PerfReport(latency=total, flops=flops, bytes=bytes_,
-                     breakdown={"prefill": pf.latency, "decode": dec + lats[0]},
+                     breakdown={"prefill": pf.latency,
+                                "decode": dec + lats[0]},
                      bound=pf.bound)
     return rep
 
@@ -121,9 +162,18 @@ def max_batch(system: System, cfg: ModelConfig, plan: Plan,
 
 
 def throughput(system: System, cfg: ModelConfig, plan: Plan, batch: int,
-               in_len: int, out_len: int) -> float:
+               in_len: int, out_len: int,
+               evaluator: Optional[Evaluator] = None) -> float:
     """Output tokens / second for the whole system (pipeline-full steady
     state: pp stages each process different microbatches concurrently)."""
-    g = generate(system, cfg, plan, batch, in_len, out_len)
+    g = generate(system, cfg, plan, batch, in_len, out_len,
+                 evaluator=evaluator)
+    return throughput_from_generate(g, plan, batch, out_len)
+
+
+def throughput_from_generate(g: PerfReport, plan: Plan, batch: int,
+                             out_len: int) -> float:
+    """Derive steady-state throughput from an existing generate() report
+    (saves the planner a second full-model walk per plan)."""
     toks = batch * out_len * plan.dp
     return toks * plan.pp / g.latency if g.latency > 0 else 0.0

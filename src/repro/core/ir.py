@@ -1,0 +1,158 @@
+"""Symbolic operator IR: describe the computation, evaluate it later.
+
+The seed code called the operator performance models (operators.py) eagerly
+while walking the model graph, so every planner candidate and every KV sample
+point re-paid the full cost-model walk. This module splits "what computation
+happens" from "how long it takes on a device": graph.py builds a Graph of
+hashable OpSpec nodes, and evaluator.Evaluator turns a Graph (or many Graphs)
+into latencies — deduplicating identical specs, memoizing results, and
+batching the vectorized mapper search over unique matmul shapes.
+
+Design rules (DESIGN.md §2):
+  * every spec is a frozen, hashable dataclass — specs ARE cache keys;
+  * specs carry no device/system state: the same Graph can be evaluated on
+    any hardware description;
+  * a Node pairs a spec with a display name (for breakdowns) and a repeat
+    count — the n identical transformer layers of a stage become one node
+    with repeat=n, exactly mirroring the seed's evaluate-once-multiply path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, List, Tuple, Union
+
+
+@dataclass(frozen=True)
+class MatmulSpec:
+    """C[M,N] = A[M,K] @ B[K,N], `batch` independent instances.
+
+    Evaluated through the mapper's tiling/scheduling search (mapper.py);
+    unique shapes across a whole sweep are solved in one batched search.
+    """
+    m: int
+    k: int
+    n: int
+    batch: int = 1
+    bytes_in: int = 2
+    bytes_out: int = 2
+    b_shared: bool = False
+
+
+@dataclass(frozen=True)
+class SoftmaxSpec:
+    """Row-wise online softmax over (rows, cols)."""
+    rows: int
+    cols: int
+    bytes_in: int = 2
+    bytes_out: int = 2
+
+
+@dataclass(frozen=True)
+class NormSpec:
+    """layernorm (Welford mean/var) or rmsnorm (sum-of-squares) over rows."""
+    kind: str                       # "layernorm" | "rmsnorm"
+    rows: int
+    cols: int
+    bytes_in: int = 2
+    bytes_out: int = 2
+
+
+@dataclass(frozen=True)
+class ElementwiseSpec:
+    """Pointwise map. kind selects the specialised model:
+    "gelu" (tanh approx), "silu_mul" (SwiGLU gate, 2 inputs), or "generic"
+    (flops_per_elt flops, n_in operand streams)."""
+    kind: str                       # "generic" | "gelu" | "silu_mul"
+    n_elements: int
+    flops_per_elt: float = 1.0
+    n_in: int = 1
+    bytes_elt: int = 2
+
+
+@dataclass(frozen=True)
+class ScanSpec:
+    """Linear-recurrence scan (RWKV6 WKV / RG-LRU) — extension op,
+    DESIGN.md §5."""
+    seq: int
+    batch: int
+    d_state: float
+    flops_per_step: float
+    bytes_io: float
+    chunk: int = 128
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    """Device-device communication primitive under the LogGP link model.
+
+    n_bytes follows each primitive's convention in interconnect.py (e.g. the
+    full gathered size for all_gather). n_devices is the participating group
+    size, NOT the system size — the evaluator supplies the link parameters.
+    """
+    kind: str     # "all_reduce" | "reduce_scatter" | "all_gather" | "all_to_all" | "p2p"
+    n_bytes: float
+    n_devices: int = 0              # 0 -> whole system
+
+
+@dataclass(frozen=True)
+class TrafficSpec:
+    """Pure main-memory data movement (KV append, embedding gather)."""
+    n_bytes: float
+
+
+OpSpec = Union[MatmulSpec, SoftmaxSpec, NormSpec, ElementwiseSpec, ScanSpec,
+               CollectiveSpec, TrafficSpec]
+
+
+@dataclass(frozen=True)
+class Node:
+    """One IR node: a spec, a breakdown name, and a repeat multiplier."""
+    spec: OpSpec
+    name: str
+    repeat: int = 1
+
+
+@dataclass(frozen=True)
+class Graph:
+    """An ordered computation: a tuple of Nodes.
+
+    Ordering matters only for reproducibility of float summation — totals are
+    accumulated in node order, matching the seed eager path bit-for-bit.
+    """
+    nodes: Tuple[Node, ...] = ()
+
+    def __iter__(self) -> Iterator[Node]:
+        return iter(self.nodes)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __add__(self, other: "Graph") -> "Graph":
+        return Graph(self.nodes + other.nodes)
+
+    def scaled(self, repeat: int, prefix: str = "") -> "Graph":
+        """Multiply every node's repeat (identical layers -> one node x n)."""
+        return Graph(tuple(Node(n.spec, prefix + n.name, n.repeat * repeat)
+                           for n in self.nodes))
+
+    def specs(self) -> List[OpSpec]:
+        return [n.spec for n in self.nodes]
+
+
+class GraphBuilder:
+    """Mutable accumulator for Graph construction."""
+
+    def __init__(self) -> None:
+        self._nodes: List[Node] = []
+
+    def add(self, spec: OpSpec, name: str, repeat: int = 1) -> "GraphBuilder":
+        self._nodes.append(Node(spec, name, repeat))
+        return self
+
+    def extend(self, graph_or_nodes: Union[Graph, Iterable[Node]]
+               ) -> "GraphBuilder":
+        self._nodes.extend(graph_or_nodes)
+        return self
+
+    def build(self) -> Graph:
+        return Graph(tuple(self._nodes))

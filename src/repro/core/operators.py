@@ -29,12 +29,17 @@ class OpResult:
     mapping: Optional[Mapping] = None
 
     def __add__(self, other: "OpResult") -> "OpResult":
+        # the dominant (slower) operand decides the bound and contributes its
+        # mapping, so combined results keep their Pallas BlockSpec hints
+        dom, sub = (self, other) if self.latency >= other.latency \
+            else (other, self)
         return OpResult(
             name=f"{self.name}+{other.name}",
             latency=self.latency + other.latency,
             flops=self.flops + other.flops,
             main_memory_bytes=self.main_memory_bytes + other.main_memory_bytes,
-            bound=self.bound if self.latency >= other.latency else other.bound,
+            bound=dom.bound,
+            mapping=dom.mapping if dom.mapping is not None else sub.mapping,
         )
 
 
@@ -125,10 +130,31 @@ def layernorm(dev: Device, rows: int, cols: int, bytes_in: int = 2,
     return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
 
 
-def rmsnorm(dev: Device, rows: int, cols: int, **kw) -> OpResult:
-    r = layernorm(dev, rows, cols, **kw)
-    return OpResult(kw.get("name", "rmsnorm"), r.latency * 0.85, r.flops * 0.6,
-                    r.main_memory_bytes, r.bound)
+def rmsnorm(dev: Device, rows: int, cols: int, bytes_in: int = 2,
+            bytes_out: int = 2, name: str = "rmsnorm") -> OpResult:
+    """RMSNorm: sum-of-squares reduction + x * rsqrt(ms) * g.
+
+    First-class model (no layernorm fudge factors): one fused read pass
+    accumulates the sum of squares and normalizes, ~4 flops/element (square-
+    accumulate, scale, one rsqrt per row amortized). The chunked-reduction
+    penalty is the same mechanism as layernorm's — rows strip-mined into
+    col-chunks that fit a core's local buffer — but each chunk carries a
+    single fp32 partial (sum of squares) instead of a (mean, M2) pair.
+    """
+    n = rows * cols
+    bytes_ = n * (bytes_in + bytes_out)
+    mem_t = bytes_ / dev.memory_bandwidth
+    flops = 4.0 * n   # x*x accumulate + x * rsqrt(ms) * g
+    cmp_t = _vector_time(dev, flops, special_frac=0.05) \
+        / _row_parallel_util(dev, rows)
+    chunk = max(1, dev.core.local_buffer_bytes // (2 * bytes_in))
+    n_chunks = -(-cols // chunk)
+    if n_chunks > 1:
+        part_bytes = rows * n_chunks * 8         # fp32 sum-of-squares partial
+        mem_t += 2 * part_bytes / dev.global_buffer_bandwidth
+        cmp_t += _vector_time(dev, rows * n_chunks * 4.0) \
+            / _row_parallel_util(dev, rows)
+    return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
 
 
 def gelu(dev: Device, n_elements: int, bytes_in: int = 2,

@@ -1,14 +1,21 @@
 """Parallelism planner — the paper's model used the way Sec. IV/V uses it:
 enumerate plans, keep the ones that fit memory, rank by predicted latency or
 throughput. launch/serve.py and launch/train.py call this to pick TP/PP/DP.
+
+The whole sweep shares ONE Evaluator: every candidate plan's graphs are
+deduplicated against everything already evaluated, so plan #2 onward pays
+only for GEMM shapes and operator extents it hasn't seen (plans that differ
+only in dp re-use the entire cost model of their tp/pp siblings). Pass your
+own Evaluator to inspect cache statistics afterwards.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import List, Optional
 
 from ..configs.base import ModelConfig
+from .evaluator import Evaluator
 from .hardware import System
 from .graph import Plan
 from . import inference_model as im
@@ -47,7 +54,9 @@ def enumerate_plans(system: System, cfg: ModelConfig,
 
 def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
                out_len: int, objective: str = "latency",
-               max_tp: Optional[int] = None) -> List[RankedPlan]:
+               max_tp: Optional[int] = None,
+               evaluator: Optional[Evaluator] = None) -> List[RankedPlan]:
+    ev = im._evaluator(system, evaluator)
     out = []
     for plan in enumerate_plans(system, cfg, max_tp=max_tp):
         b_local = max(1, batch // plan.dp)
@@ -56,8 +65,9 @@ def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
         if not fits:
             out.append(RankedPlan(plan, math.inf, 0.0, mem, False))
             continue
-        g = im.generate(system, cfg, plan, b_local, in_len, out_len)
-        tp_ = im.throughput(system, cfg, plan, b_local, in_len, out_len)
+        g = im.generate(system, cfg, plan, b_local, in_len, out_len,
+                        evaluator=ev)
+        tp_ = im.throughput_from_generate(g, plan, b_local, out_len)
         out.append(RankedPlan(plan, g.latency, tp_, mem, True))
     key = (lambda r: r.latency) if objective == "latency" \
         else (lambda r: -r.throughput)
@@ -65,8 +75,10 @@ def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
 
 
 def best_plan(system: System, cfg: ModelConfig, batch: int, in_len: int,
-              out_len: int, objective: str = "latency") -> RankedPlan:
-    ranked = rank_plans(system, cfg, batch, in_len, out_len, objective)
+              out_len: int, objective: str = "latency",
+              evaluator: Optional[Evaluator] = None) -> RankedPlan:
+    ranked = rank_plans(system, cfg, batch, in_len, out_len, objective,
+                        evaluator=evaluator)
     fitting = [r for r in ranked if r.fits]
     if not fitting:
         raise ValueError(

@@ -45,6 +45,69 @@ def op_roofline(dev: Device, flops: float, bytes_: float,
     return RooflinePoint(flops / peak, bytes_ / dev.memory_bandwidth)
 
 
+# --- symbolic-IR entry points ----------------------------------------------
+
+def spec_roofline(dev: Device, spec) -> RooflinePoint:
+    """Optimistic roofline bound for one ir.OpSpec (no tiling effects).
+
+    Property: the mapper/operator latency for the same spec is never below
+    this bound (tested) — the paper's Table V criticism of rooflines.
+    """
+    from .ir import (CollectiveSpec, ElementwiseSpec, MatmulSpec, NormSpec,
+                     ScanSpec, SoftmaxSpec, TrafficSpec)
+    if isinstance(spec, MatmulSpec):
+        return matmul_roofline(dev, spec.m, spec.k, spec.n, spec.batch,
+                               spec.bytes_in)
+    if isinstance(spec, SoftmaxSpec):
+        n = spec.rows * spec.cols
+        return op_roofline(dev, 4.0 * n,
+                           n * (spec.bytes_in + spec.bytes_out))
+    if isinstance(spec, NormSpec):
+        n = spec.rows * spec.cols
+        flops = (8.0 if spec.kind == "layernorm" else 4.0) * n
+        return op_roofline(dev, flops, n * (spec.bytes_in + spec.bytes_out))
+    if isinstance(spec, ElementwiseSpec):
+        per = {"gelu": 10.0, "silu_mul": 6.0}.get(spec.kind,
+                                                  spec.flops_per_elt)
+        n_in = 2 if spec.kind == "silu_mul" else spec.n_in
+        return op_roofline(dev, per * spec.n_elements,
+                           spec.n_elements * (n_in + 1) * spec.bytes_elt)
+    if isinstance(spec, ScanSpec):
+        return op_roofline(dev, spec.flops_per_step * spec.seq * spec.batch,
+                           spec.bytes_io)
+    if isinstance(spec, TrafficSpec):
+        return op_roofline(dev, 0.0, spec.n_bytes)
+    if isinstance(spec, CollectiveSpec):
+        return RooflinePoint(0.0, 0.0, 0.0)   # link-bound; see graph_roofline
+    raise TypeError(f"no roofline for spec type {type(spec).__name__}")
+
+
+def graph_roofline(system, graph) -> RooflinePoint:
+    """Three-term roofline for a whole ir.Graph: compute and memory terms sum
+    each node's optimistic bound x repeat; collective bytes go through the
+    link at its raw bandwidth (framing/latency ignored — optimistic, like the
+    rest of the roofline)."""
+    from .ir import CollectiveSpec
+    dev = system.device
+    compute = memory = coll_bytes = 0.0
+    for node in graph:
+        if isinstance(node.spec, CollectiveSpec):
+            n = node.spec.n_devices or system.device_count
+            if n > 1:
+                factor = {"all_reduce": 2.0 * (n - 1) / n,
+                          "reduce_scatter": (n - 1) / n,
+                          "all_gather": (n - 1) / n,
+                          "all_to_all": (n - 1) / n,
+                          "p2p": 1.0}.get(node.spec.kind, 1.0)
+                coll_bytes += node.spec.n_bytes * factor * node.repeat
+            continue
+        pt = spec_roofline(dev, node.spec)
+        compute += pt.compute_s * node.repeat
+        memory += pt.memory_s * node.repeat
+    return RooflinePoint(compute, memory,
+                         coll_bytes / system.link.bandwidth_bytes)
+
+
 # --- TPU v5e constants used by the dry-run three-term roofline -------------
 TPU_V5E_PEAK_BF16 = 197e12          # FLOP/s per chip
 TPU_V5E_HBM_BW = 819e9              # bytes/s per chip

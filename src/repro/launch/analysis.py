@@ -286,6 +286,44 @@ def hlo_costs(hlo_text: str) -> dict:
     return {"flops": f, "bytes": b}
 
 
+# --- bridge to the symbolic IR (core/ir.py) --------------------------------
+
+_KIND_TO_SPEC = {"all-reduce": "all_reduce", "all-gather": "all_gather",
+                 "reduce-scatter": "reduce_scatter",
+                 "all-to-all": "all_to_all", "collective-permute": "p2p"}
+
+
+def collectives_to_graph(stats: CollectiveStats, n_devices: int):
+    """Lower measured per-kind collective bytes into a CollectiveSpec graph.
+
+    The HLO pass counts *data volume per device*; the analytic link model
+    (interconnect.py) prices that volume under LogGP + ring/fc topology, so
+    the same Evaluator that prices a planner sweep can also price a compiled
+    program's communication. One node per kind, bytes summed.
+    """
+    from ..core.ir import CollectiveSpec, Graph, Node
+    nodes = []
+    for kind, bytes_ in sorted(stats.by_kind.items()):
+        spec_kind = _KIND_TO_SPEC.get(kind)
+        if spec_kind is None or bytes_ <= 0:
+            continue
+        nodes.append(Node(CollectiveSpec(spec_kind, bytes_, n_devices),
+                          f"hlo_{kind.replace('-', '_')}"))
+    return Graph(tuple(nodes))
+
+
+def predicted_collective_time(system, stats: CollectiveStats,
+                              n_devices: int = 0) -> float:
+    """Seconds the analytic interconnect model predicts for the measured
+    collective traffic of one compiled program execution."""
+    from ..core.evaluator import Evaluator
+    n = n_devices or system.device_count
+    graph = collectives_to_graph(stats, n)
+    if not len(graph):
+        return 0.0
+    return Evaluator(system).evaluate(graph).latency
+
+
 def cost_summary(compiled) -> dict:
     """Extract flops/bytes from compiled.cost_analysis() (per-device)."""
     ca = compiled.cost_analysis()

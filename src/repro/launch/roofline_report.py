@@ -21,7 +21,8 @@ from dataclasses import dataclass
 
 from ..configs import ARCHS, SHAPES, get_config
 from ..core import hardware as hw
-from ..core.graph import Plan, model_ops
+from ..core.evaluator import Evaluator
+from ..core.graph import Plan, build_model
 from ..core.roofline import (TPU_V5E_PEAK_BF16, TPU_V5E_HBM_BW,
                              TPU_V5E_ICI_BW)
 
@@ -38,26 +39,27 @@ def model_flops(cfg, shape) -> float:
 
 
 _SIM = {}
+_EVALUATOR = None     # one shared evaluator: specs dedup across the grid
 
 
 def simulated_hbm_bytes(arch: str, shape) -> float:
     """Per-chip HBM traffic from the LLMCompass model (paper Sec. III-B)."""
+    global _EVALUATOR
     key = (arch, shape.name)
     if key in _SIM:
         return _SIM[key]
     cfg = get_config(arch)
-    node = hw.tpu_v5e_pod(256)
+    if _EVALUATOR is None:
+        _EVALUATOR = Evaluator(hw.tpu_v5e_pod(256))
     plan = Plan(tp=16, dp=16)
     if shape.kind == "decode":
-        cost = model_ops(cfg, node, plan,
-                         batch=max(shape.global_batch // 16, 1), seq=1,
-                         kv_len=shape.seq_len)
-        bytes_ = cost.bytes
+        g = build_model(cfg, plan, batch=max(shape.global_batch // 16, 1),
+                        seq=1, kv_len=shape.seq_len)
+        bytes_ = _EVALUATOR.evaluate(g).bytes
     else:
-        cost = model_ops(cfg, node, plan,
-                         batch=max(shape.global_batch // 16, 1),
-                         seq=shape.seq_len, kv_len=shape.seq_len)
-        bytes_ = cost.bytes
+        g = build_model(cfg, plan, batch=max(shape.global_batch // 16, 1),
+                        seq=shape.seq_len, kv_len=shape.seq_len)
+        bytes_ = _EVALUATOR.evaluate(g).bytes
         if shape.kind == "train":
             bytes_ *= 3.5       # bwd + remat re-reads (documented factor)
     _SIM[key] = bytes_

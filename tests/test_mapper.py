@@ -1,7 +1,8 @@
 """Mapper + systolic model: unit and property tests (paper Sec. III-B1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import hardware as hw
 from repro.core.mapper import matmul_perf, _tile_candidates

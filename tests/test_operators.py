@@ -2,7 +2,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import hardware as hw
 from repro.core import operators as ops
@@ -37,6 +38,32 @@ def test_op_add_combines():
     c = a + b
     assert c.latency == pytest.approx(a.latency + b.latency)
     assert c.flops == a.flops + b.flops
+
+
+def test_op_add_keeps_dominant_mapping():
+    """Combined results carry the dominant operand's Pallas BlockSpec hint."""
+    mm = ops.matmul(A100, 4096, 4096, 4096)
+    small = ops.gelu(A100, 128)
+    assert mm.latency > small.latency
+    assert (mm + small).mapping == mm.mapping
+    assert (small + mm).mapping == mm.mapping      # dominant wins either way
+    # dominant without a mapping falls back to the other operand's
+    assert (mm + ops.matmul(A100, 64, 64, 64)).mapping == mm.mapping
+
+
+def test_rmsnorm_first_class_model():
+    """No fudge factors: ~4 flops/element, one fused read+write pass, same
+    chunked-reduction penalty mechanism as layernorm."""
+    r = ops.rmsnorm(A100, 8192, 4096)
+    ln = ops.layernorm(A100, 8192, 4096)
+    assert r.flops == 4.0 * 8192 * 4096
+    assert r.main_memory_bytes == 8192 * 4096 * 4      # 1 read + 1 write, bf16
+    assert 0 < r.latency <= ln.latency                 # cheaper than layernorm
+    # extreme reduction dims lose row parallelism and pay the cross-chunk
+    # penalty (paper Fig. 5d trend)
+    per_elt_fast = ops.rmsnorm(A100, 8192, 4096).latency / (8192 * 4096)
+    per_elt_slow = ops.rmsnorm(A100, 2, 4 << 20).latency / (2 * (4 << 20))
+    assert per_elt_slow > per_elt_fast * 1.2
 
 
 @given(n=st.integers(1, 1 << 28))
