@@ -1,0 +1,1 @@
+"""Paper-reproduction benchmark package; run `python -m benchmarks.run`."""

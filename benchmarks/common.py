@@ -2,7 +2,6 @@
 (name,us_per_call,derived)."""
 from __future__ import annotations
 
-import sys
 import time
 
 

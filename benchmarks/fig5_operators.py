@@ -16,7 +16,9 @@ from repro.core import hardware as hw
 from repro.core import operators as ops
 from repro.core import interconnect as net
 from repro.core import roofline
-from repro.core.graph import Plan, layer_ops
+from repro.core.graph import Plan
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
 from repro.configs import get_config
 
 from .common import emit
@@ -78,20 +80,18 @@ def run() -> dict:
              f"TFLOPS={r.flops / r.latency / 1e12:.1f}")
 
     # (h, i) GPT-3 layer prefill & decode on 4xA100 TP  [Fig. 5h/5i]
+    # one declarative layer-stage case: prefill@2048, decode@kv 3072
     cfg = get_config("gpt3-175b")
-    plan = Plan(tp=4)
-    pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
-    dc = layer_ops(cfg, node, plan, 0, batch=8, seq=1, kv_len=3072)
-    emit("fig5h/gpt3_prefill_layer_4xA100", pf.latency * 1e6,
-         f"paper_range_ms=30-80;ours_ms={pf.latency * 1e3:.1f}")
-    emit("fig5i/gpt3_decode_layer_4xA100", dc.latency * 1e6,
-         f"paper_range_ms=0.3-1.5;ours_ms={dc.latency * 1e3:.3f}")
-    out["prefill_in_range"] = 0.020 <= pf.latency <= 0.110
-    out["decode_in_range"] = 0.0003 <= dc.latency <= 0.0015
-    out["prefill_compute_bound"] = max(
-        pf.by_bound(), key=pf.by_bound().get) == "compute"
-    out["decode_memory_bound"] = max(
-        dc.by_bound(), key=dc.by_bound().get) in ("memory", "overhead")
+    r = Study(cases=[Case(node, cfg, Plan(tp=4), Workload(8, 2048, 1024),
+                          stage="layer")], enforce_fits=False).run()[0]
+    emit("fig5h/gpt3_prefill_layer_4xA100", r.prefill_latency * 1e6,
+         f"paper_range_ms=30-80;ours_ms={r.prefill_latency * 1e3:.1f}")
+    emit("fig5i/gpt3_decode_layer_4xA100", r.decode_latency * 1e6,
+         f"paper_range_ms=0.3-1.5;ours_ms={r.decode_latency * 1e3:.3f}")
+    out["prefill_in_range"] = 0.020 <= r.prefill_latency <= 0.110
+    out["decode_in_range"] = 0.0003 <= r.decode_latency <= 0.0015
+    out["prefill_compute_bound"] = r.dominant == "compute"
+    out["decode_memory_bound"] = r.decode_dominant in ("memory", "overhead")
     return out
 
 

@@ -4,7 +4,7 @@ components; our calibration (core/area.py) reproduces the Table IV triple
 (826 / 478 / 787 mm^2)."""
 from __future__ import annotations
 
-from repro.core import area, cost, hardware as hw
+from repro.core import area, hardware as hw
 
 from .common import emit
 

@@ -3,34 +3,44 @@ base design.
 
 Claims (C4): prefill gains ~14.3% from 800->2000 GB/s then flattens
 (+3.5% to 3200); decode speeds up 1.88x from 800->2000 and +26% more to
-3200; implication (3): decoding is much more bandwidth-sensitive."""
+3200; implication (3): decoding is much more bandwidth-sensitive.
+
+One Study over the eight bandwidth variants (layer stage): every variant's
+GEMM shapes go through one device-axis stacked mapper search."""
 from __future__ import annotations
 
 from dataclasses import replace
 
 from repro.core import hardware as hw
-from repro.core.graph import Plan, layer_ops
+from repro.core.graph import Plan
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
 from repro.configs import get_config
 
 from .common import emit
+
+BANDWIDTHS_GBPS = (400, 800, 1200, 1600, 2000, 2400, 2800, 3200)
 
 
 def run() -> dict:
     cfg = get_config("gpt3-175b")
     plan = Plan(tp=4)
+    wl = Workload(8, 2048, 1024)    # prefill@2048, decode@kv 3072
     base = hw.nvidia_a100()
+    study = Study(cases=[
+        Case(hw.make_system(
+            replace(base, main_memory=replace(base.main_memory,
+                                              bandwidth_bytes=bw * 1e9)),
+            4, 600, "fc"), cfg, plan, wl, stage="layer", label=str(bw))
+        for bw in BANDWIDTHS_GBPS], enforce_fits=False)
     lat = {}
-    for bw in (400, 800, 1200, 1600, 2000, 2400, 2800, 3200):
-        dev = replace(base, main_memory=replace(base.main_memory,
-                                                bandwidth_bytes=bw * 1e9))
-        node = hw.make_system(dev, 4, 600, "fc")
-        pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
-        dc = layer_ops(cfg, node, plan, 0, batch=8, seq=1, kv_len=3072)
-        lat[bw] = (pf.latency, dc.latency)
-        emit(f"fig8/bw{bw}_prefill", pf.latency * 1e6,
-             f"ms={pf.latency * 1e3:.2f}")
-        emit(f"fig8/bw{bw}_decode", dc.latency * 1e6,
-             f"ms={dc.latency * 1e3:.4f}")
+    for r in study.run():
+        bw = int(r.case.label)
+        lat[bw] = (r.prefill_latency, r.decode_latency)
+        emit(f"fig8/bw{bw}_prefill", r.prefill_latency * 1e6,
+             f"ms={r.prefill_latency * 1e3:.2f}")
+        emit(f"fig8/bw{bw}_decode", r.decode_latency * 1e6,
+             f"ms={r.decode_latency * 1e3:.4f}")
     pf_gain = lat[800][0] / lat[2000][0]
     pf_tail = lat[2000][0] / lat[3200][0]
     dc_gain = lat[800][1] / lat[2000][1]

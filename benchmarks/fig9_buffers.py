@@ -3,13 +3,18 @@
 Claims (C5): local 64->192KB improves prefill ~18%, 192->1024KB adds only
 ~0.2%; decode insensitive (<0.5%). Global 10->40MB ~11.8% prefill, 40->80MB
 ~0.01%. Implications (4)(5): buffers big enough to keep the systolic arrays
-busy; beyond that, nothing."""
+busy; beyond that, nothing.
+
+Both sweeps are declared as ONE Study (nine device variants, layer stage):
+one device-axis stacked mapper search covers the whole grid."""
 from __future__ import annotations
 
 from dataclasses import replace
 
 from repro.core import hardware as hw
-from repro.core.graph import Plan, layer_ops
+from repro.core.graph import Plan
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
 from repro.configs import get_config
 
 from .common import emit
@@ -17,30 +22,40 @@ from .common import emit
 KB = 1024
 MB = 1024 * KB
 
+LOCAL_KB = (64, 128, 192, 512, 1024)
+GLOBAL_MB = (10, 20, 40, 80)
+
 
 def run() -> dict:
     cfg = get_config("gpt3-175b")
     plan = Plan(tp=4)
+    wl = Workload(8, 2048, 1024)    # prefill@2048, decode@kv 3072
     base = hw.nvidia_a100()
-    pf_l, dc_l = {}, {}
-    for kb in (64, 128, 192, 512, 1024):
-        dev = replace(base, core=replace(base.core,
-                                         local_buffer_bytes=kb * KB))
-        node = hw.make_system(dev, 4, 600, "fc")
-        pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
-        dc = layer_ops(cfg, node, plan, 0, batch=8, seq=1, kv_len=3072)
-        pf_l[kb], dc_l[kb] = pf.latency, dc.latency
-        emit(f"fig9/local{kb}KB_prefill", pf.latency * 1e6,
-             f"ms={pf.latency * 1e3:.2f}")
-        emit(f"fig9/local{kb}KB_decode", dc.latency * 1e6, "")
-    pf_g = {}
-    for mb in (10, 20, 40, 80):
-        dev = replace(base, global_buffer_bytes=mb * MB)
-        node = hw.make_system(dev, 4, 600, "fc")
-        pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
-        pf_g[mb] = pf.latency
-        emit(f"fig9/global{mb}MB_prefill", pf.latency * 1e6,
-             f"ms={pf.latency * 1e3:.2f}")
+    cases = [
+        Case(hw.make_system(
+            replace(base, core=replace(base.core,
+                                       local_buffer_bytes=kb * KB)),
+            4, 600, "fc"), cfg, plan, wl, stage="layer", label=f"local{kb}")
+        for kb in LOCAL_KB]
+    cases += [
+        Case(hw.make_system(replace(base, global_buffer_bytes=mb * MB),
+                            4, 600, "fc"),
+             cfg, plan, wl, stage="layer", label=f"global{mb}")
+        for mb in GLOBAL_MB]
+    res = Study(cases=cases, enforce_fits=False).run()
+
+    pf_l, dc_l, pf_g = {}, {}, {}
+    for kb in LOCAL_KB:
+        r = res.get(label=f"local{kb}")
+        pf_l[kb], dc_l[kb] = r.prefill_latency, r.decode_latency
+        emit(f"fig9/local{kb}KB_prefill", r.prefill_latency * 1e6,
+             f"ms={r.prefill_latency * 1e3:.2f}")
+        emit(f"fig9/local{kb}KB_decode", r.decode_latency * 1e6, "")
+    for mb in GLOBAL_MB:
+        r = res.get(label=f"global{mb}")
+        pf_g[mb] = r.prefill_latency
+        emit(f"fig9/global{mb}MB_prefill", r.prefill_latency * 1e6,
+             f"ms={r.prefill_latency * 1e3:.2f}")
     checks = {
         "local_64_192_gain": round(pf_l[64] / pf_l[192], 3),   # paper 1.18
         "local_192_1024_gain": round(pf_l[192] / pf_l[1024], 3),  # ~1.002

@@ -2,12 +2,13 @@
 to the 10 assigned architectures on a TPU v5e pod slice — the simulator
 used the way launch/serve.py uses it (DESIGN.md Sec. 4).
 
-One Evaluator is shared across ALL archs and plans: every plan after the
-first pays only for GEMM shapes it hasn't seen, and the unique shapes of
-each generate() call are solved in one stacked mapper search. The same
-sweep is then re-run in seed-replica mode (fresh-per-sweep dense per-shape
-search, no batching) to report the wall-clock speedup of the IR/evaluator
-path — the ISSUE 1 acceptance number."""
+One Evaluator is shared across ALL archs and plans: rank_plans is a thin
+Study per arch (DESIGN.md §6), so each arch's whole plan enumeration is
+pre-solved in one stacked mapper search and every plan after the first pays
+only for GEMM shapes it hasn't seen. The same sweep is then re-run in
+seed-replica mode (fresh-per-sweep dense per-shape search, no batching) to
+report the wall-clock speedup of the IR/evaluator path — the ISSUE 1
+acceptance number."""
 from __future__ import annotations
 
 import time

@@ -3,34 +3,55 @@
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) followed by
 a CHECKS summary per benchmark. Exit code 1 if any reproduction claim
 check fails.
+
+``--quick`` runs a reduced smoke subset (fast modules + a shrunken
+study_speed grid) so sweep regressions fail in CI rather than only in full
+paper reproductions.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced CI smoke subset")
+    args = ap.parse_args(argv)
+
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
-                   mapper_speed, planner_archs)
+                   mapper_speed, planner_archs, study_speed)
+
+    if args.quick:
+        modules = [
+            ("fig6_area", fig6_area, {}),
+            ("table3_compute_designs", table3_compute_designs, {}),
+            ("fig8_bandwidth", fig8_bandwidth, {}),
+            ("fig9_buffers", fig9_buffers, {}),
+            ("study_speed", study_speed, {"quick": True}),
+        ]
+    else:
+        modules = [
+            ("fig5_operators", fig5_operators, {}),
+            ("fig6_area", fig6_area, {}),
+            ("table3_compute_designs", table3_compute_designs, {}),
+            ("fig8_bandwidth", fig8_bandwidth, {}),
+            ("fig9_buffers", fig9_buffers, {}),
+            ("table4_designs", table4_designs, {}),
+            ("mapper_speed", mapper_speed, {}),
+            ("planner_archs", planner_archs, {}),
+            ("study_speed", study_speed, {}),
+        ]
 
     print("name,us_per_call,derived")
-    modules = [
-        ("fig5_operators", fig5_operators),
-        ("fig6_area", fig6_area),
-        ("table3_compute_designs", table3_compute_designs),
-        ("fig8_bandwidth", fig8_bandwidth),
-        ("fig9_buffers", fig9_buffers),
-        ("table4_designs", table4_designs),
-        ("mapper_speed", mapper_speed),
-        ("planner_archs", planner_archs),
-    ]
     failed = []
     all_checks = {}
-    for name, mod in modules:
+    for name, mod, kw in modules:
         t0 = time.perf_counter()
-        checks = mod.run()
+        checks = mod.run(**kw)
         dt = time.perf_counter() - t0
         all_checks[name] = checks
         bad = [k for k, v in checks.items()

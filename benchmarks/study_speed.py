@@ -1,0 +1,108 @@
+"""ISSUE 2 acceptance benchmark: the declarative Study front-door vs the
+loops it replaces.
+
+A 5-design x 2-model x 3-workload grid (30 generate cases) is run three ways:
+
+  study     — ONE Study: shared Evaluator per System, every unique
+              (device, GEMM shape) pair pre-solved in a single device-axis
+              stacked mapper search;
+  loop      — the pre-Study hand-rolled per-System loop: a cold default
+              Evaluator per `im.generate` call (what the benchmarks actually
+              did before this API), sharing only the global matmul memo;
+  seed path — the same loop with per-shape dense-search Evaluators
+              (use_reference_mapper=True, no batching, no memo): the seed
+              commit's cost, and the ISSUE 2 acceptance baseline.
+
+Every CaseResult latency must match both baselines bit-for-bit; the
+wall-clock ratios and cache statistics are the acceptance numbers.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import hardware as hw
+from repro.core import inference_model as im
+from repro.core.evaluator import Evaluator
+from repro.core.graph import Plan
+from repro.core.mapper import clear_matmul_cache
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
+from repro.configs import get_config
+
+from .common import emit
+
+DESIGNS = "ABCDE"                       # paper Table III compute designs
+MODELS = ("qwen2-0.5b", "qwen3-1.7b")
+WORKLOADS = {
+    "chat": Workload(8, 2048, 256),
+    "short": Workload(16, 256, 256),
+    "longgen": Workload(4, 512, 1024),
+}
+PLAN = Plan(tp=1, dp=4)
+
+
+def _cases(quick: bool = False):
+    designs = DESIGNS[:2] if quick else DESIGNS
+    models = MODELS[:1] if quick else MODELS
+    wl = dict(list(WORKLOADS.items())[:2]) if quick else WORKLOADS
+    return [Case(hw.make_system(hw.compute_design(d), 4, 600, "fc"),
+                 get_config(m), PLAN, w, label=f"{d}/{m}/{name}")
+            for d in designs for m in models for name, w in wl.items()]
+
+
+def _generate(case, evaluator):
+    w = case.workload
+    return im.generate(case.system, case.cfg, case.plan, w.batch, w.in_len,
+                       w.out_len, samples=w.samples, evaluator=evaluator)
+
+
+def run(quick: bool = False) -> dict:
+    cases = _cases(quick)
+
+    # ---- Study path: one declarative grid ---------------------------------
+    clear_matmul_cache()
+    t0 = time.perf_counter()
+    res = Study(cases=cases, enforce_fits=False).run()
+    dt_study = time.perf_counter() - t0
+
+    # ---- pre-Study loop: cold default Evaluator per call, warm memo -------
+    clear_matmul_cache()
+    t0 = time.perf_counter()
+    loop = [_generate(c, Evaluator(c.system)) for c in cases]
+    dt_loop = time.perf_counter() - t0
+
+    # ---- seed path: per-shape dense-search Evaluator per case -------------
+    t0 = time.perf_counter()
+    seed = [_generate(c, Evaluator(c.system, use_reference_mapper=True))
+            for c in cases]
+    dt_seed = time.perf_counter() - t0
+    clear_matmul_cache()
+
+    exact = all(r.latency == a.latency == b.latency
+                for r, a, b in zip(res, loop, seed))
+    speedup_loop = dt_loop / max(dt_study, 1e-9)
+    speedup_seed = dt_seed / max(dt_study, 1e-9)
+    emit("study_speed/grid", dt_study * 1e6,
+         f"cases={len(cases)};study_s={dt_study:.2f};loop_s={dt_loop:.2f};"
+         f"seed_s={dt_seed:.2f};vs_loop={speedup_loop:.1f}x;"
+         f"vs_seed={speedup_seed:.1f}x")
+    emit("study_speed/study_stats", 0.0,
+         res.stats.summary().replace(" ", ";"))
+    for system, ev in res.evaluators.items():
+        emit(f"study_speed/evaluator_{system.device.name}", 0.0,
+             ev.stats.summary().replace(" ", ";"))
+    return {
+        "cases": len(cases),
+        "study_seconds": round(dt_study, 2),
+        "loop_seconds": round(dt_loop, 2),
+        "seed_loop_seconds": round(dt_seed, 2),
+        "speedup_vs_loop_x": round(speedup_loop, 2),
+        "speedup_vs_seed_x": round(speedup_seed, 2),
+        "unique_matmul_pairs": res.stats.matmul_pairs_presolved,
+        "bitwise_equal_to_both_baselines": exact,
+        "faster_than_seed_loop": dt_seed > dt_study,
+    }
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

@@ -3,11 +3,17 @@
 Claims (C3): A (1/4 compute) ~3.25x slower prefill than B but ~equal
 decode; E (few huge cores) degrades both; implication (1): compute helps
 prefill, barely helps decode; implication (2): large systolic arrays are
-less efficient at decode."""
+less efficient at decode.
+
+Declared as ONE Study over the five designs (layer stage = the paper's
+single-layer prefill/decode microbenchmark): all five devices' GEMM shapes
+are solved in a single device-axis stacked mapper search."""
 from __future__ import annotations
 
 from repro.core import hardware as hw
-from repro.core.graph import Plan, layer_ops
+from repro.core.graph import Plan
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
 from repro.configs import get_config
 
 from .common import emit
@@ -16,17 +22,20 @@ from .common import emit
 def run() -> dict:
     cfg = get_config("gpt3-175b")
     plan = Plan(tp=4)
+    # layer stage: prefill at seq=2048, decode at kv = 2048 + 1024 = 3072
+    wl = Workload(8, 2048, 1024)
+    study = Study(cases=[
+        Case(hw.make_system(hw.compute_design(w), 4, 600, "fc"),
+             cfg, plan, wl, stage="layer", label=w)
+        for w in "ABCDE"], enforce_fits=False)
     res = {}
-    for which in "ABCDE":
-        dev = hw.compute_design(which)
-        node = hw.make_system(dev, 4, link_gbps=600, topology="fc")
-        pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
-        dc = layer_ops(cfg, node, plan, 0, batch=8, seq=1, kv_len=3072)
-        res[which] = (pf.latency, dc.latency)
-        emit(f"table3/design_{which}_prefill", pf.latency * 1e6,
-             f"ms={pf.latency * 1e3:.2f}")
-        emit(f"table3/design_{which}_decode", dc.latency * 1e6,
-             f"ms={dc.latency * 1e3:.4f}")
+    for r in study.run():
+        w = r.case.label
+        res[w] = (r.prefill_latency, r.decode_latency)
+        emit(f"table3/design_{w}_prefill", r.prefill_latency * 1e6,
+             f"ms={r.prefill_latency * 1e3:.2f}")
+        emit(f"table3/design_{w}_decode", r.decode_latency * 1e6,
+             f"ms={r.decode_latency * 1e3:.4f}")
     a_pf, a_dc = res["A"]
     b_pf, b_dc = res["B"]
     e_pf, e_dc = res["E"]

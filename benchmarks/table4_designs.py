@@ -6,16 +6,23 @@ Claims:
   C7 throughput-oriented (512GB DDR @1TB/s, 4x systolic, half cores):
      ~1.42x throughput, ~3.41x perf/$, ~9x worse latency (Fig. 12).
 
-Settings follow the paper: Fig. 10 = batch 16, 4-way TP, 48 GPT-3 layers;
-Fig. 12 = largest batch within memory, 8-way pipeline (12 layers/device).
+Settings follow the paper: Fig. 10 = batch 16, 4-way TP, 48 GPT-3 layers
+over the paper's six in/out shapes — declared as one 2-system x 6-workload
+Study grid; Fig. 12 = largest batch within memory, 8-way pipeline. Die
+area/cost come from the Study's per-device pricing, and throughput goes
+through the shared `throughput_from_generate` helper (pipeline-full pp
+multiplier included — the seed hand-rolled `b * 2048 / latency` here and
+silently dropped it).
 """
 from __future__ import annotations
 
 from dataclasses import replace
 
-from repro.core import area, cost, hardware as hw
+from repro.core import hardware as hw
 from repro.core import inference_model as im
 from repro.core.graph import Plan
+from repro.core.study import Case, Study
+from repro.core.workload import Workload, paper_workloads
 from repro.configs import get_config
 
 from .common import emit
@@ -23,10 +30,6 @@ from .common import emit
 
 def _half_gpt3(cfg):
     return replace(cfg, n_layers=48)
-
-
-def _eighth_gpt3(cfg):
-    return replace(cfg, n_layers=12)
 
 
 def run() -> dict:
@@ -37,18 +40,18 @@ def run() -> dict:
     checks = {}
 
     # ---- Fig. 10/11: latency-oriented vs GA100 (48 layers, batch 16, TP4)
-    cfg48 = _half_gpt3(cfg)
-    plan = Plan(tp=4)
+    wls = paper_workloads(batch=16)    # the six (in, out) shapes, Fig.10 order
+    res10 = Study(systems=[hw.make_system(ga, 4, 600, "fc"),
+                           hw.make_system(lat, 4, 600, "fc")],
+                  configs=[_half_gpt3(cfg)], plans=[Plan(tp=4)],
+                  workloads=wls, enforce_fits=False).run()
     ratios = []
-    for in_len, out_len in ((256, 256), (512, 1024), (1024, 1024),
-                            (2048, 256), (256, 2048), (2048, 2048)):
-        t_ga = im.generate(hw.make_system(ga, 4, 600, "fc"), cfg48, plan,
-                           16, in_len, out_len).latency
-        t_lat = im.generate(hw.make_system(lat, 4, 600, "fc"), cfg48, plan,
-                            16, in_len, out_len).latency
+    for name, w in wls.items():
+        t_ga = res10.get(device="nvidia-ga100", label=name).latency
+        t_lat = res10.get(device="latency-oriented", label=name).latency
         ratio = t_ga / t_lat          # normalized performance (>=: better)
         ratios.append(ratio)
-        emit(f"fig10/in{in_len}_out{out_len}", t_lat * 1e6,
+        emit(f"fig10/in{w.in_len}_out{w.out_len}", t_lat * 1e6,
              f"norm_perf={ratio:.3f}")
     avg_perf = sum(ratios) / len(ratios)
     checks["latency_design_norm_perf"] = round(avg_perf, 3)   # paper 0.953
@@ -56,45 +59,46 @@ def run() -> dict:
     # worst case should be long-input/short-output (prefill-heavy)
     checks["worst_is_prefill_heavy"] = min(ratios) == ratios[3]
 
-    # die area + cost
-    a_ga = area.device_area(ga, 600).total_mm2
-    a_lat = area.device_area(lat, 600).total_mm2
-    a_thr = area.device_area(thr, 600).total_mm2
-    c_ga = cost.device_cost(ga, a_ga)
-    c_lat = cost.device_cost(lat, a_lat)
-    c_thr = cost.device_cost(thr, a_thr)
-    emit("table4/area_mm2", 0.0,
-         f"lat={a_lat:.0f};ga={a_ga:.0f};thr={a_thr:.0f};paper=478/826/787")
-    emit("table4/cost_usd", 0.0,
-         f"lat={c_lat.total_usd:.0f};ga={c_ga.total_usd:.0f};"
-         f"thr={c_thr.total_usd:.0f};paper=640/711/296")
-    checks["area_reduction"] = round(1 - a_lat / a_ga, 3)     # paper 0.421
-    perf_cost_lat = avg_perf * c_ga.total_usd / c_lat.total_usd
-    checks["latency_perf_per_cost"] = round(perf_cost_lat, 2)  # paper 1.06
-
     # ---- Fig. 12: throughput-oriented vs 8-GA100, PP=8, 12 layers each
-    cfg12 = _eighth_gpt3(cfg)
     plan_pp = Plan(tp=1, pp=8)
-    tps = {}
-    lats = {}
+    cases12 = []
     for dev, tag in ((ga, "ga100"), (thr, "throughput")):
         node = hw.make_system(dev, 8, 600, "fc")
         # largest batch within memory (paper: "largest batch size within
         # memory capacity"); full GPT-3 = 8 stages x 12 layers
-        full_plan = Plan(tp=1, pp=8)
-        b = im.max_batch(node, cfg, full_plan, 2048 + 2048)
+        b = im.max_batch(node, cfg, plan_pp, 2048 + 2048)
         b = max(1, min(b, 512))
-        g = im.generate(node, cfg, full_plan, b, 2048, 2048)
-        tp_tok = b * 2048 / g.latency
-        tps[tag] = tp_tok
-        lats[tag] = g.latency / 1.0
-        emit(f"fig12/{tag}", g.latency * 1e6,
-             f"batch={b};tokens_per_s={tp_tok:.0f}")
+        cases12.append(Case(node, cfg, plan_pp, Workload(b, 2048, 2048),
+                            label=tag))
+    res12 = Study(cases=cases12, enforce_fits=False).run()
+    tps, lats = {}, {}
+    for r in res12:
+        tag = r.case.label
+        tps[tag] = r.throughput        # shared helper: includes pp multiplier
+        lats[tag] = r.latency
+        emit(f"fig12/{tag}", r.latency * 1e6,
+             f"batch={r.case.workload.batch};tokens_per_s={r.throughput:.0f}")
+
+    # die area + cost: the Study priced each distinct device exactly once
+    r_ga = res10.get(device="nvidia-ga100", label="in256_out256")
+    r_lat = res10.get(device="latency-oriented", label="in256_out256")
+    r_thr = res12.get(label="throughput")
+    a_ga, c_ga = r_ga.area_mm2, r_ga.device_cost_usd
+    a_lat, c_lat = r_lat.area_mm2, r_lat.device_cost_usd
+    a_thr, c_thr = r_thr.area_mm2, r_thr.device_cost_usd
+    emit("table4/area_mm2", 0.0,
+         f"lat={a_lat:.0f};ga={a_ga:.0f};thr={a_thr:.0f};paper=478/826/787")
+    emit("table4/cost_usd", 0.0,
+         f"lat={c_lat:.0f};ga={c_ga:.0f};thr={c_thr:.0f};paper=640/711/296")
+    checks["area_reduction"] = round(1 - a_lat / a_ga, 3)     # paper 0.421
+    perf_cost_lat = avg_perf * c_ga / c_lat
+    checks["latency_perf_per_cost"] = round(perf_cost_lat, 2)  # paper 1.06
+
     thr_x = tps["throughput"] / tps["ga100"]
     lat_x = lats["throughput"] / lats["ga100"]
     checks["throughput_gain_x"] = round(thr_x, 2)            # paper 1.42
     checks["throughput_latency_x"] = round(lat_x, 2)         # paper 9.21
-    perf_cost_thr = thr_x * c_ga.total_usd / c_thr.total_usd
+    perf_cost_thr = thr_x * c_ga / c_thr
     checks["throughput_perf_per_cost"] = round(perf_cost_thr, 2)  # 3.41
     checks["throughput_ok"] = 1.1 <= thr_x <= 2.2
     checks["perf_cost_ok"] = 2.0 <= perf_cost_thr <= 5.0

@@ -1,7 +1,9 @@
 """Design-space exploration with LLMCompass — reproduces the paper's Sec. V
-workflow and goes beyond it: sweep compute/memory configurations, evaluate
-perf and perf/$ for BOTH the paper's GPT-3 setting and one of our assigned
-architectures (qwen3-1.7b serving).
+workflow and goes beyond it: declare one Study grid over five device
+designs and two models (the paper's GPT-3 setting and our assigned
+qwen3-1.7b serving workload), and let the engine share evaluators, solve
+every design's GEMM shapes in one device-axis stacked mapper search, and
+price each die exactly once.
 
     PYTHONPATH=src python examples/design_space_exploration.py
 """
@@ -10,46 +12,53 @@ sys.path.insert(0, "src")
 
 from dataclasses import replace
 
-from repro.core import area, cost, hardware as hw
-from repro.core import inference_model as im
+from repro.core import hardware as hw
 from repro.core.graph import Plan
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
 from repro.configs import get_config
 
-gpt3 = get_config("gpt3-175b")
+gpt3_48 = replace(get_config("gpt3-175b"), n_layers=48)
 qwen = get_config("qwen3-1.7b")
 
-print("design, die_mm2, cost_usd, gpt3_gen_s, qwen_tok_s, perf_per_usd")
 designs = {
     "ga100 (baseline)": hw.nvidia_ga100(),
     "latency-oriented (paper)": hw.latency_oriented(),
     "throughput-oriented (paper)": hw.throughput_oriented(),
-    # beyond-paper what-ifs:
+    # beyond-paper what-ifs (public constructors only):
     "half-HBM latency design": replace(
         hw.latency_oriented(), name="half-hbm",
         main_memory=hw.MainMemory(1.0e12, 80 * hw.GB, "HBM2e")),
     "double-MXU ga100": replace(
         hw.nvidia_ga100(), name="2xmxu",
-        core=hw._gpu_core(lanes=4, vec_width=32, sa=32, local_kb=384)),
+        core=hw.make_core(lanes=4, vec_width=32, sa_rows=32, local_kb=384)),
 }
 
-base_perf = None
+# the grid, declared: per design, GPT-3 generation latency (paper Fig. 10
+# shape) and qwen serving throughput on the same 4-device node
+cases = []
 for name, dev in designs.items():
-    rep = area.device_area(dev, 600)
-    c = cost.device_cost(dev, rep.total_mm2)
     node = hw.make_system(dev, 4, 600, "fc")
-    g = im.generate(node, replace(gpt3, n_layers=48), Plan(tp=4),
-                    batch=16, in_len=1024, out_len=1024)
-    # assigned-arch serving throughput on the same node
-    tq = im.throughput(node, qwen, Plan(tp=1, dp=4), batch=16,
-                       in_len=2048, out_len=256)
+    cases.append(Case(node, gpt3_48, Plan(tp=4), Workload(16, 1024, 1024),
+                      label=f"{name}|gpt3"))
+    cases.append(Case(node, qwen, Plan(tp=1, dp=4), Workload(16, 2048, 256),
+                      label=f"{name}|qwen"))
+
+res = Study(cases=cases, enforce_fits=False).run()
+
+print("design, die_mm2, cost_usd, gpt3_gen_s, qwen_tok_s, perf_per_usd")
+base_perf = base_cost = None
+for name in designs:
+    g = res.get(label=f"{name}|gpt3")
+    q = res.get(label=f"{name}|qwen")
     perf = 1.0 / g.latency
     if base_perf is None:
-        base_perf = perf
-        base_cost = c.total_usd
-    rel_ppd = (perf / base_perf) / (c.total_usd / base_cost)
-    print(f"{name:28s} {rep.total_mm2:7.0f} {c.total_usd:8.0f} "
-          f"{g.latency:10.2f} {tq:10.0f} {rel_ppd:8.2f}")
+        base_perf, base_cost = perf, g.device_cost_usd
+    rel_ppd = (perf / base_perf) / (g.device_cost_usd / base_cost)
+    print(f"{name:28s} {g.area_mm2:7.0f} {g.device_cost_usd:8.0f} "
+          f"{g.latency:10.2f} {q.throughput:10.0f} {rel_ppd:8.2f}")
 
+print(f"\n[study] {res.stats.summary()}")
 print("\npaper claims: latency design ~0.95x perf at 0.58x area (1.06x "
       "perf/$); throughput design 1.42x throughput, 3.41x perf/$ "
       "(reproduced in benchmarks/table4_designs.py)")

@@ -1,8 +1,9 @@
 """LLMCompass core: the papers contribution as a composable library."""
 from . import hardware, systolic, mapper, operators, interconnect
-from . import ir, evaluator
-from . import area, cost, graph, inference_model, planner, roofline
+from . import ir, evaluator, workload
+from . import area, cost, graph, inference_model, study, planner, roofline
 
 __all__ = ["hardware", "systolic", "mapper", "operators", "interconnect",
-           "ir", "evaluator",
-           "area", "cost", "graph", "inference_model", "planner", "roofline"]
+           "ir", "evaluator", "workload",
+           "area", "cost", "graph", "inference_model", "study", "planner",
+           "roofline"]

@@ -20,8 +20,8 @@ model_ops multiplied per-op costs by the layer count.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
 
 from .hardware import Device, Link, System
 from . import operators as ops

@@ -18,10 +18,10 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 from ..configs.base import ModelConfig
-from .hardware import Device, System
+from .hardware import System
 from . import operators as ops
 from .ir import (CollectiveSpec, ElementwiseSpec, Graph, GraphBuilder,
                  MatmulSpec, NormSpec, ScanSpec, SoftmaxSpec, TrafficSpec)

@@ -12,8 +12,7 @@ paper's own Table I convention for TPUv3.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 KB = 1024
@@ -146,12 +145,30 @@ class System:
 # Presets (paper Table I, Table III, Table IV)
 # ---------------------------------------------------------------------------
 
-def _gpu_core(lanes: int, vec_width: int, sa: int, local_kb: int) -> Core:
+def make_core(lanes: int, vec_width: int, sa_rows: int,
+              sa_cols: Optional[int] = None, local_kb: int = 192,
+              register_file_kb: int = 256,
+              local_buffer_bw_per_cycle: int = 128) -> Core:
+    """Public constructor for custom core configurations (design what-ifs).
+
+    Builds a Core of `lanes` lanes, each with a `vec_width`-wide vector unit
+    and an `sa_rows` x `sa_cols` systolic array (square when sa_cols is
+    omitted), sharing `local_kb` KiB of local buffer. Use with
+    `dataclasses.replace(device, core=make_core(...))` to sweep compute
+    organizations the way Sec. V does.
+    """
     return Core(
         lanes=lanes,
-        lane=Lane(VectorUnit(vec_width), SystolicArray(sa, sa)),
+        lane=Lane(VectorUnit(vec_width),
+                  SystolicArray(sa_rows, sa_cols if sa_cols else sa_rows),
+                  register_file_bytes=register_file_kb * KB),
         local_buffer_bytes=local_kb * KB,
+        local_buffer_bw_per_cycle=local_buffer_bw_per_cycle,
     )
+
+
+def _gpu_core(lanes: int, vec_width: int, sa: int, local_kb: int) -> Core:
+    return make_core(lanes, vec_width, sa, local_kb=local_kb)
 
 
 def nvidia_a100() -> Device:

@@ -15,7 +15,6 @@ a single stacked mapper search.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -83,6 +82,20 @@ def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     return rep
 
 
+def generate_graphs(cfg: ModelConfig, plan: Plan, batch: int, in_len: int,
+                    out_len: int, samples: int = 8):
+    """The exact symbolic graphs `generate` evaluates: the prefill graph plus
+    one decode graph per KV trapezoid sample point. Exposed so study.Study
+    can pre-collect every GEMM shape of a whole grid into one device-axis
+    stacked mapper search before any case is priced. Returns (graphs, pts)
+    where pts are the sampled KV lengths (graphs[1:] align with pts)."""
+    pts = [in_len + round(i * (out_len - 1) / max(samples - 1, 1))
+           for i in range(samples)]
+    graphs = [build_model(cfg, plan, batch, in_len, kv_len=in_len)] + \
+        [build_model(cfg, plan, batch, seq=1, kv_len=kv) for kv in pts]
+    return graphs, pts
+
+
 def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
              in_len: int, out_len: int, samples: int = 8,
              evaluator: Optional[Evaluator] = None) -> PerfReport:
@@ -93,10 +106,7 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     batched call: their unique GEMM shapes share a single mapper search.
     """
     ev = _evaluator(system, evaluator)
-    pts = [in_len + round(i * (out_len - 1) / max(samples - 1, 1))
-           for i in range(samples)]
-    graphs = [build_model(cfg, plan, batch, in_len, kv_len=in_len)] + \
-        [build_model(cfg, plan, batch, seq=1, kv_len=kv) for kv in pts]
+    graphs, pts = generate_graphs(cfg, plan, batch, in_len, out_len, samples)
     costs = ev.evaluate_many(graphs)
 
     pf = _report(costs[0])
@@ -125,7 +135,14 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
 
 def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
                       max_len: int, bytes_per: int = 2) -> float:
-    params = cfg.param_count() * bytes_per / (plan.tp * plan.pp)
+    param_n = cfg.param_count()
+    if cfg.n_experts and plan.ep > 1:
+        # expert FFN weights are sharded ep-ways: each device in the expert
+        # group holds n_experts/ep experts (graph.build_mlp's e_local), so
+        # only 1/ep of the expert weight bytes are resident per device
+        expert_n = cfg.n_layers * cfg.n_experts * cfg.mlp_params()
+        param_n = param_n - expert_n * (plan.ep - 1) / plan.ep
+    params = param_n * bytes_per / (plan.tp * plan.pp)
     kv = batch * max_len * cfg.kv_bytes_per_token(bytes_per) / (plan.tp * plan.pp)
     if cfg.attn_window:   # local attention caps the resident KV window
         n_attn = sum(1 for i in range(cfg.n_layers)

@@ -12,7 +12,6 @@ plans need them. All reuse the same link equation.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 
 from .hardware import Link, System
 from .operators import OpResult

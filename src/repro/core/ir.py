@@ -18,7 +18,7 @@ Design rules (DESIGN.md §2):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterable, Iterator, List, Tuple, Union
 
 

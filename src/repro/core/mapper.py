@@ -22,6 +22,13 @@ arithmetic instead of being masked to inf afterwards, so the engine only pays
 for feasible mappings — same search space, same winners, bit-identical
 latencies (equivalence-tested against `matmul_perf_reference`, the paper-
 faithful dense search), measured in benchmarks/mapper_speed.py.
+
+The stacked axis also carries a *device* dimension (`matmul_perf_batch_multi`,
+ISSUE 2): every hardware scalar the cost model reads (array geometry, core
+count, frequency, buffer port widths, memory bandwidth) is gathered per
+candidate row exactly like the shape scalars, so one broadcast solves
+(device, shape) pairs across a whole design-space Study. Per-device results
+are bit-identical to the single-device path (tests/test_study.py).
 """
 from __future__ import annotations
 
@@ -129,20 +136,32 @@ def _candidate_rows(dev: Device, shape: MatmulShape):
     return cols, p_ok, n_dense
 
 
-def _solve_chunk(dev: Device, shapes: Sequence[MatmulShape],
+def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
                  rows: Sequence, p_oks: Sequence) -> List[Tuple]:
-    """Evaluate the concatenated feasible candidates of several shapes in one
-    broadcast and pick each shape's winner. Returns per-shape winner tuples."""
-    sa = dev.core.lane.systolic_array
-    lanes = dev.core.lanes
-    freq = dev.frequency_hz
-    cores = dev.core_count
-    gb_bw_cyc = dev.global_buffer_bw_per_cycle
-    mem_bw = dev.memory_bandwidth
-    vec_tp = dev.core.lanes * dev.core.lane.vector_unit.width
-
+    """Evaluate the concatenated feasible candidates of several (device,
+    shape) pairs in one broadcast and pick each pair's winner. Returns
+    per-pair winner tuples. `devs[i]` is the device of `shapes[i]`."""
     counts = [r[0].size for r in rows]
     offs = np.concatenate([[0], np.cumsum(counts)])
+
+    # per-row gathered device scalars; collapse to a python scalar when every
+    # pair targets the same device so the single-device path stays cheap
+    # (bit-identical either way: numpy broadcasting of an equal-valued array)
+    def dscal(vals, dtype=np.int64):
+        if len(set(vals)) == 1:
+            return vals[0]
+        return np.concatenate([np.full(c, v, dtype=dtype)
+                               for c, v in zip(counts, vals)])
+
+    sa_rows = dscal([d.core.lane.systolic_array.rows for d in devs])
+    sa_cols = dscal([d.core.lane.systolic_array.cols for d in devs])
+    lanes = dscal([d.core.lanes for d in devs])
+    freq = dscal([d.frequency_hz for d in devs], dtype=np.float64)
+    cores = dscal([d.core_count for d in devs])
+    gb_bw_cyc = dscal([d.global_buffer_bw_per_cycle for d in devs])
+    mem_bw = dscal([d.memory_bandwidth for d in devs], dtype=np.float64)
+    vec_tp = dscal([d.core.lanes * d.core.lane.vector_unit.width
+                    for d in devs])
     TM_, TK_, TN_, SM_, SK_, SN_ = (
         np.concatenate([r[j] for r in rows]) for j in range(6))
     P_OK = np.concatenate(p_oks, axis=0) if p_oks else np.zeros((0, 4), bool)
@@ -158,7 +177,7 @@ def _solve_chunk(dev: Device, shapes: Sequence[MatmulShape],
 
     # ---------------- level 0: core compute time for one subtile ----------
     sn_lane = -(-SN_ // lanes)           # ceil: subtile split across lanes
-    subtile_cyc = gemm_cycles_array(SM_, SK_, sn_lane, sa.rows, sa.cols)
+    subtile_cyc = gemm_cycles_array(SM_, SK_, sn_lane, sa_rows, sa_cols)
 
     # ---------------- level 1: schedule subtiles across cores -------------
     n_sub_m = -(-TM_ // SM_)
@@ -231,7 +250,7 @@ def _solve_chunk(dev: Device, shapes: Sequence[MatmulShape],
         if seg.size == 0 or not np.isfinite(seg).any():
             m, k, n = shape[0], shape[1], shape[2]
             raise ValueError(
-                f"no valid mapping for matmul {m}x{k}x{n} on {dev.name} "
+                f"no valid mapping for matmul {m}x{k}x{n} on {devs[s].name} "
                 f"(buffers too small?)")
         flat = int(np.argmin(seg))
         row, p = lo + flat // seg.shape[1], flat % seg.shape[1]
@@ -256,8 +275,12 @@ def _solve_chunk(dev: Device, shapes: Sequence[MatmulShape],
     return out
 
 
-# candidate-row budget per broadcast chunk (~20 work arrays x 8B x rows)
-_CHUNK_ROWS = 4 << 20
+# candidate-row budget per broadcast chunk (~25 work arrays x 8B x rows).
+# 64k rows keeps the chunk working set ~10-15MB — cache-resident, measured
+# ~2.7x faster than multi-hundred-MB chunks on grid-sized presolves
+# (benchmarks/study_speed.py); winners are chunk-composition-independent,
+# so this only moves wall-clock, never results.
+_CHUNK_ROWS = 1 << 16
 
 # global (device, shape) -> MatmulResult memo shared by the single-shape and
 # batched entry points, so independent Evaluators never re-search a shape
@@ -270,17 +293,24 @@ def clear_matmul_cache() -> None:
     _MM_CACHE.clear()
 
 
-def matmul_perf_batch(device: Device,
-                      shapes: Sequence[MatmulShape]) -> List[MatmulResult]:
-    """Search the mapping space of many GEMM shapes in stacked broadcasts.
+def is_memoized(device: Device, shape: MatmulShape) -> bool:
+    """True if this (device, shape) pair is already in the global memo."""
+    return (device, shape) in _MM_CACHE
 
-    All un-memoized shapes' feasible candidates are concatenated along a flat
-    shapes x candidates axis and evaluated together (chunked to bound peak
-    memory), so a planner sweep with hundreds of unique GEMMs pays the numpy
-    dispatch overhead once per chunk instead of once per shape. Results are
-    identical to calling matmul_perf per shape.
+
+def matmul_perf_batch_multi(
+        pairs: Sequence[Tuple[Device, MatmulShape]]) -> List[MatmulResult]:
+    """Search the mapping space of many (device, shape) GEMM pairs in stacked
+    broadcasts — the device-axis generalization of `matmul_perf_batch`.
+
+    All un-memoized pairs' feasible candidates are concatenated along one
+    flat pairs x candidates axis — device scalars gathered per row exactly
+    like shape scalars — and evaluated together (chunked to bound peak
+    memory). A whole design-space Study (many Systems x models x workloads)
+    pays the numpy dispatch overhead once per chunk instead of once per
+    device per shape. Results are identical to calling matmul_perf per pair.
     """
-    results: List[MatmulResult] = [None] * len(shapes)   # type: ignore
+    results: List[MatmulResult] = [None] * len(pairs)   # type: ignore
     pend_idx: List[int] = []
     pend_rows, pend_poks, pend_dense = [], [], []
     budget = 0
@@ -289,7 +319,8 @@ def matmul_perf_batch(device: Device,
         nonlocal budget
         if not pend_idx:
             return
-        solved = _solve_chunk(device, [shapes[i] for i in pend_idx],
+        solved = _solve_chunk([pairs[i][0] for i in pend_idx],
+                              [pairs[i][1] for i in pend_idx],
                               pend_rows, pend_poks)
         for i, nd, (lat, flops, mm_bytes, mapping) in zip(
                 pend_idx, pend_dense, solved):
@@ -298,14 +329,14 @@ def matmul_perf_batch(device: Device,
                              mapping=mapping, candidates_searched=nd)
             results[i] = r
             if len(_MM_CACHE) < _MM_CACHE_MAX:
-                _MM_CACHE[(device, shapes[i])] = r
+                _MM_CACHE[pairs[i]] = r
         pend_idx.clear()
         pend_rows.clear()
         pend_poks.clear()
         pend_dense.clear()
         budget = 0
 
-    for i, shape in enumerate(shapes):
+    for i, (device, shape) in enumerate(pairs):
         hit = _MM_CACHE.get((device, shape))
         if hit is not None:
             results[i] = hit
@@ -320,6 +351,13 @@ def matmul_perf_batch(device: Device,
             flush()
     flush()
     return results
+
+
+def matmul_perf_batch(device: Device,
+                      shapes: Sequence[MatmulShape]) -> List[MatmulResult]:
+    """Search the mapping space of many GEMM shapes of one device in stacked
+    broadcasts (the single-device view of `matmul_perf_batch_multi`)."""
+    return matmul_perf_batch_multi([(device, s) for s in shapes])
 
 
 def matmul_perf(device: Device, m: int, k: int, n: int,

@@ -16,7 +16,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from .hardware import Device
-from .mapper import Mapping, MatmulResult, matmul_perf
+from .mapper import Mapping, matmul_perf
 
 
 @dataclass(frozen=True)

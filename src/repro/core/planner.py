@@ -2,11 +2,11 @@
 enumerate plans, keep the ones that fit memory, rank by predicted latency or
 throughput. launch/serve.py and launch/train.py call this to pick TP/PP/DP.
 
-The whole sweep shares ONE Evaluator: every candidate plan's graphs are
-deduplicated against everything already evaluated, so plan #2 onward pays
-only for GEMM shapes and operator extents it hasn't seen (plans that differ
-only in dp re-use the entire cost model of their tp/pp siblings). Pass your
-own Evaluator to inspect cache statistics afterwards.
+`rank_plans` is a thin Study over the plan enumeration (ISSUE 2): one
+declarative case per candidate plan, sharing ONE Evaluator across the whole
+sweep, with every unique GEMM shape pre-solved in a single stacked mapper
+search. Plans that differ only in dp re-use the entire cost model of their
+tp/pp siblings. Pass your own Evaluator to inspect cache statistics.
 """
 from __future__ import annotations
 
@@ -18,7 +18,8 @@ from ..configs.base import ModelConfig
 from .evaluator import Evaluator
 from .hardware import System
 from .graph import Plan
-from . import inference_model as im
+from .study import Case, Study
+from .workload import Workload
 
 
 @dataclass(frozen=True)
@@ -56,19 +57,15 @@ def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
                out_len: int, objective: str = "latency",
                max_tp: Optional[int] = None,
                evaluator: Optional[Evaluator] = None) -> List[RankedPlan]:
-    ev = im._evaluator(system, evaluator)
-    out = []
-    for plan in enumerate_plans(system, cfg, max_tp=max_tp):
-        b_local = max(1, batch // plan.dp)
-        mem = im.memory_per_device(cfg, plan, b_local, in_len + out_len)
-        fits = mem <= system.device.memory_capacity
-        if not fits:
-            out.append(RankedPlan(plan, math.inf, 0.0, mem, False))
-            continue
-        g = im.generate(system, cfg, plan, b_local, in_len, out_len,
-                        evaluator=ev)
-        tp_ = im.throughput_from_generate(g, plan, b_local, out_len)
-        out.append(RankedPlan(plan, g.latency, tp_, mem, True))
+    """Rank every candidate plan: a Study with one case per plan, splitting
+    the global batch over each plan's dp replicas."""
+    cases = [Case(system, cfg, plan,
+                  Workload(max(1, batch // plan.dp), in_len, out_len))
+             for plan in enumerate_plans(system, cfg, max_tp=max_tp)]
+    res = Study(cases=cases,
+                evaluators={system: evaluator} if evaluator else None).run()
+    out = [RankedPlan(r.case.plan, r.latency, r.throughput,
+                      r.memory_per_device, r.fits) for r in res]
     key = (lambda r: r.latency) if objective == "latency" \
         else (lambda r: -r.throughput)
     return sorted(out, key=key)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .hardware import Device, System
+from .hardware import Device
 
 
 @dataclass(frozen=True)

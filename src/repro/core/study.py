@@ -1,0 +1,416 @@
+"""Declarative Study API: the one front-door for design-space sweeps (ISSUE 2).
+
+The paper's headline workflow is the systems x models x workloads grid
+(Sec. V-VII). A `Study` makes that grid the first-class object: declare
+cross-products of Systems, ModelConfigs, Plans and Workloads (or an explicit
+`Case` list) and `run()` them as one unit. Under the hood the Study
+
+  * owns ONE shared Evaluator per System (spec-level dedup across every case
+    that targets it),
+  * pre-collects every un-memoized (device, GEMM-shape) pair across the WHOLE
+    grid and solves them in one device-axis stacked mapper search
+    (`mapper.matmul_perf_batch_multi`) before any case is priced — the
+    cross-System analog of the per-call shapes axis,
+  * prices die area and cost once per distinct device (area.py / cost.py),
+  * applies the planner's memory-fit check before paying for evaluation
+    (`enforce_fits=False` to reproduce paper microbenchmarks regardless).
+
+Every case's numbers are bit-for-bit identical to the single-case seed path
+(`inference_model.generate` et al. with a cold Evaluator) — tested against
+frozen seed-commit numbers in tests/test_study.py.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import math
+import time
+from dataclasses import dataclass
+from typing import (Dict, Iterable, Iterator, List, Mapping, Optional,
+                    Sequence, Union)
+
+from ..configs.base import ModelConfig
+from . import area as area_mod
+from . import cost as cost_mod
+from . import inference_model as im
+from .evaluator import Evaluator
+from .graph import Plan, build_layer, build_model
+from .hardware import Device, System
+from .ir import Graph, MatmulSpec
+from .mapper import is_memoized, matmul_perf_batch_multi
+from .workload import Workload
+
+#: evaluation stages a Case can request
+#:   generate — prefill + decode trapezoid (the end-to-end request metric)
+#:   prefill  — one full-model prefill pass at in_len
+#:   decode   — one full-model decode step at kv = in_len + out_len
+#:   layer    — single-layer prefill AND decode microbenchmark (paper
+#:              Table III / Fig. 8 / Fig. 9 convention: prefill at seq=in_len,
+#:              decode at kv = in_len + out_len, no lm head, no pipeline fill)
+STAGES = ("generate", "prefill", "decode", "layer")
+
+
+@dataclass(frozen=True)
+class Case:
+    """One point of the evaluation grid — frozen, hashable, declarative."""
+    system: System
+    cfg: ModelConfig
+    plan: Plan
+    workload: Workload
+    stage: str = "generate"
+    label: str = ""
+
+    def __post_init__(self):
+        if self.stage not in STAGES:
+            raise ValueError(f"unknown stage {self.stage!r}; have {STAGES}")
+
+
+@dataclass(frozen=True)
+class CaseResult:
+    """Structured result row for one Case (latency in seconds)."""
+    case: Case
+    latency: float              # stage metric: generate/prefill/decode lat.
+    throughput: float           # output tok/s (pipeline-full steady state)
+    memory_per_device: float    # bytes, planner memory model
+    fits: bool
+    dominant: str               # binding resource of the (prefill) breakdown
+    decode_dominant: str        # binding resource of the decode step ("layer")
+    flops: float
+    bytes: float
+    prefill_latency: float
+    decode_latency: float
+    area_mm2: float             # die area of ONE device
+    device_cost_usd: float      # manufacturing cost of ONE device
+    system_cost_usd: float      # device cost x device_count
+    perf_per_dollar: float      # throughput / system_cost_usd
+
+    def to_row(self) -> dict:
+        c = self.case
+        w = c.workload
+        return {
+            "label": c.label, "stage": c.stage,
+            "device": c.system.device.name,
+            "n_devices": c.system.device_count,
+            "model": c.cfg.name,
+            "tp": c.plan.tp, "pp": c.plan.pp, "dp": c.plan.dp,
+            "ep": c.plan.ep,
+            "batch": w.batch, "in_len": w.in_len, "out_len": w.out_len,
+            "latency_s": self.latency,
+            "throughput_tok_s": self.throughput,
+            "memory_per_device_gib": self.memory_per_device / 2 ** 30,
+            "fits": self.fits,
+            "dominant_bound": self.dominant,
+            "prefill_s": self.prefill_latency,
+            "decode_s": self.decode_latency,
+            "area_mm2": self.area_mm2,
+            "system_cost_usd": self.system_cost_usd,
+            "perf_per_usd": self.perf_per_dollar,
+        }
+
+
+@dataclass
+class StudyStats:
+    """Grid-level accounting: what one run() shared and pre-solved."""
+    cases: int = 0
+    evaluated: int = 0
+    skipped_unfit: int = 0
+    systems: int = 0
+    devices: int = 0
+    matmul_pairs_presolved: int = 0   # unique un-memoized (device, shape)
+    presolve_seconds: float = 0.0
+    total_seconds: float = 0.0
+
+    def summary(self) -> str:
+        return (f"cases={self.cases} evaluated={self.evaluated} "
+                f"skipped_unfit={self.skipped_unfit} "
+                f"systems={self.systems} devices={self.devices} "
+                f"matmul_pairs_presolved={self.matmul_pairs_presolved} "
+                f"presolve_s={self.presolve_seconds:.2f} "
+                f"total_s={self.total_seconds:.2f}")
+
+
+_OBJECTIVES = {
+    "latency": (lambda r: r.latency, False),
+    "throughput": (lambda r: r.throughput, True),
+    "perf_per_dollar": (lambda r: r.perf_per_dollar, True),
+}
+
+
+class StudyResult:
+    """Ordered CaseResult rows + grid stats + the shared evaluators."""
+
+    def __init__(self, results: List[CaseResult], stats: StudyStats,
+                 evaluators: Dict[System, Evaluator]) -> None:
+        self.results = results
+        self.stats = stats
+        self.evaluators = evaluators
+
+    def __iter__(self) -> Iterator[CaseResult]:
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i) -> CaseResult:
+        return self.results[i]
+
+    # -- structured access -------------------------------------------------
+    def to_rows(self) -> List[dict]:
+        return [r.to_row() for r in self.results]
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        rows = self.to_rows()
+        buf = io.StringIO()
+        if rows:
+            w = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def filter(self, **kw) -> List[CaseResult]:
+        """Select rows by case attributes: device (name), model (cfg name),
+        system, plan, workload, stage, label, batch, in_len, out_len."""
+        def val(r: CaseResult, key: str):
+            c = r.case
+            try:
+                return {
+                    "device": c.system.device.name,
+                    "model": c.cfg.name,
+                    "system": c.system,
+                    "plan": c.plan,
+                    "workload": c.workload,
+                    "stage": c.stage,
+                    "label": c.label,
+                    "batch": c.workload.batch,
+                    "in_len": c.workload.in_len,
+                    "out_len": c.workload.out_len,
+                }[key]
+            except KeyError:
+                raise KeyError(f"unknown filter key {key!r}")
+        return [r for r in self.results
+                if all(val(r, k) == v for k, v in kw.items())]
+
+    def get(self, **kw) -> CaseResult:
+        hits = self.filter(**kw)
+        if len(hits) != 1:
+            raise KeyError(f"filter {kw} matched {len(hits)} rows, need 1")
+        return hits[0]
+
+    def best(self, objective: str = "latency") -> CaseResult:
+        """Best FITTING row under the objective (latency | throughput |
+        perf_per_dollar)."""
+        try:
+            key, maximize = _OBJECTIVES[objective]
+        except KeyError:
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"have {sorted(_OBJECTIVES)}")
+        fitting = [r for r in self.results if r.fits]
+        if not fitting:
+            raise ValueError("no case fits device memory under any plan")
+        return (max if maximize else min)(fitting, key=key)
+
+
+PlanAxis = Union[str, Sequence[Plan], None]
+
+
+class Study:
+    """Declarative sweep: systems x configs x plans x workloads, or explicit
+    cases. Construct, then `run()` once; rerunning reuses the evaluators."""
+
+    def __init__(self,
+                 systems: Optional[Sequence[System]] = None,
+                 configs: Optional[Sequence[ModelConfig]] = None,
+                 plans: PlanAxis = None,
+                 workloads: Union[Mapping[str, Workload],
+                                  Sequence[Workload], None] = None,
+                 cases: Optional[Iterable[Case]] = None,
+                 stage: str = "generate",
+                 enforce_fits: bool = True,
+                 evaluators: Optional[Mapping[System, Evaluator]] = None
+                 ) -> None:
+        if cases is not None:
+            if any(x is not None for x in (systems, configs, workloads)) \
+                    or plans is not None:
+                raise ValueError("pass either an explicit case list OR grid "
+                                 "axes, not both")
+            self.cases = list(cases)
+        else:
+            if not systems or not configs or not workloads:
+                raise ValueError("a grid Study needs systems, configs and "
+                                 "workloads (plans default to [Plan()])")
+            self.cases = self._expand(systems, configs, plans, workloads,
+                                      stage)
+        self.enforce_fits = enforce_fits
+        self._evaluators: Dict[System, Evaluator] = \
+            dict(evaluators) if evaluators else {}
+        self._prices: Dict[tuple, tuple] = {}   # (device, link_bw) -> price
+
+    @staticmethod
+    def _expand(systems, configs, plans, workloads, stage) -> List[Case]:
+        if isinstance(workloads, Mapping):
+            wl_items = list(workloads.items())
+        else:
+            wl_items = [(w.tag, w) for w in workloads]
+        if plans is None:
+            plans = [Plan()]
+        elif plans != "auto":
+            plans = list(plans)    # once: survive one-shot iterables
+        out = []
+        for system in systems:
+            for cfg in configs:
+                if plans == "auto":
+                    from .planner import enumerate_plans   # avoid cycle
+                    plan_list = enumerate_plans(system, cfg)
+                else:
+                    plan_list = plans
+                for plan in plan_list:
+                    for label, w in wl_items:
+                        out.append(Case(system, cfg, plan, w, stage=stage,
+                                        label=label))
+        return out
+
+    # ------------------------------------------------------------------
+    def _evaluator(self, system: System) -> Evaluator:
+        """One Evaluator per System for the Study's lifetime: provided ones
+        are validated, created ones are kept so rerunning run() reuses them."""
+        ev = im._evaluator(system, self._evaluators.get(system))
+        self._evaluators[system] = ev
+        return ev
+
+    @staticmethod
+    def _graphs(case: Case) -> List[Graph]:
+        """The symbolic graphs this case will evaluate (for shape pre-pass
+        AND, for the layer stage, the evaluation itself)."""
+        w, cfg, plan = case.workload, case.cfg, case.plan
+        if case.stage == "generate":
+            graphs, _ = im.generate_graphs(cfg, plan, w.batch, w.in_len,
+                                           w.out_len, w.samples)
+            return graphs
+        if case.stage == "prefill":
+            return [build_model(cfg, plan, w.batch, w.in_len,
+                                kv_len=w.in_len)]
+        if case.stage == "decode":
+            return [build_model(cfg, plan, w.batch, seq=1,
+                                kv_len=w.total_len)]
+        # layer: single-layer prefill + decode microbenchmark graphs
+        return [build_layer(cfg, plan, 0, w.batch, w.in_len, w.in_len),
+                build_layer(cfg, plan, 0, w.batch, 1, w.total_len)]
+
+    def _price(self, system: System) -> tuple:
+        """(area_mm2, device_cost_usd) — computed once per distinct device
+        (and link bandwidth, which sets the SerDes PHY area share)."""
+        dev: Device = system.device
+        link_gbps = system.link.bandwidth_bytes / 1e9
+        key = (dev, link_gbps)
+        if key not in self._prices:
+            a = area_mod.device_area(dev, link_gbps).total_mm2
+            c = cost_mod.device_cost(dev, a).total_usd
+            self._prices[key] = (a, c)
+        return self._prices[key]
+
+    # ------------------------------------------------------------------
+    def run(self) -> StudyResult:
+        t0 = time.perf_counter()
+        stats = StudyStats(cases=len(self.cases))
+        evaluators: Dict[System, Evaluator] = {}
+        for case in self.cases:
+            if case.system not in evaluators:
+                evaluators[case.system] = self._evaluator(case.system)
+        stats.systems = len(evaluators)
+        stats.devices = len({s.device for s in evaluators})
+
+        # ---- memory-fit pre-pass (planner model; no evaluation cost) -----
+        prelim = []
+        for case in self.cases:
+            w = case.workload
+            mem = im.memory_per_device(case.cfg, case.plan, w.batch,
+                                       w.total_len)
+            fits = mem <= case.system.device.memory_capacity
+            prelim.append((case, mem, fits))
+
+        # ---- grid-wide device-axis stacked mapper search -----------------
+        t_pre = time.perf_counter()
+        pairs, seen = [], set()
+        for case, _, fits in prelim:
+            if self.enforce_fits and not fits:
+                continue
+            ev = evaluators[case.system]
+            if ev.use_reference_mapper or not ev.batch_matmuls:
+                continue    # seed-replica evaluators keep the eager path
+            dev = case.system.device
+            for g in self._graphs(case):
+                for node in g:
+                    s = node.spec
+                    if not isinstance(s, MatmulSpec):
+                        continue
+                    pair = (dev, (s.m, s.k, s.n, s.batch, s.bytes_in,
+                                  s.bytes_out, s.b_shared))
+                    if pair not in seen and not is_memoized(*pair):
+                        seen.add(pair)
+                        pairs.append(pair)
+        if pairs:
+            matmul_perf_batch_multi(pairs)
+        stats.matmul_pairs_presolved = len(pairs)
+        stats.presolve_seconds = time.perf_counter() - t_pre
+
+        # ---- per-case evaluation (all mapper work is now memo hits) ------
+        results = []
+        for case, mem, fits in prelim:
+            price_a, price_c = self._price(case.system)
+            sys_cost = price_c * case.system.device_count
+            if self.enforce_fits and not fits:
+                stats.skipped_unfit += 1
+                results.append(CaseResult(
+                    case, math.inf, 0.0, mem, False, "n/a", "n/a",
+                    0.0, 0.0, math.inf, math.inf,
+                    price_a, price_c, sys_cost, 0.0))
+                continue
+            stats.evaluated += 1
+            results.append(self._evaluate(
+                case, mem, fits, evaluators[case.system],
+                price_a, price_c, sys_cost))
+        stats.total_seconds = time.perf_counter() - t0
+        return StudyResult(results, stats, evaluators)
+
+    def _evaluate(self, case: Case, mem: float, fits: bool, ev: Evaluator,
+                  price_a: float, price_c: float,
+                  sys_cost: float) -> CaseResult:
+        w, cfg, plan, system = case.workload, case.cfg, case.plan, case.system
+        dec_dom = "n/a"
+        if case.stage == "generate":
+            rep = im.generate(system, cfg, plan, w.batch, w.in_len, w.out_len,
+                              samples=w.samples, evaluator=ev)
+            latency = rep.latency
+            thr = im.throughput_from_generate(rep, plan, w.batch, w.out_len)
+            pf, dc = rep.breakdown["prefill"], rep.breakdown["decode"]
+            dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
+        elif case.stage == "prefill":
+            rep = im.prefill(system, cfg, plan, w.batch, w.in_len,
+                             evaluator=ev)
+            latency = pf = rep.latency
+            dc = 0.0
+            thr = w.tokens_in * plan.dp * plan.pp / latency
+            dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
+        elif case.stage == "decode":
+            rep = im.decode_step(system, cfg, plan, w.batch, w.total_len,
+                                 evaluator=ev)
+            latency = dc = rep.latency
+            pf = 0.0
+            thr = w.batch * plan.dp * plan.pp / latency
+            dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
+        else:   # layer microbenchmark: prefill + decode single-layer graphs
+            pf_c, dc_c = ev.evaluate_many(self._graphs(case))
+            latency = pf = pf_c.latency
+            dc = dc_c.latency
+            thr = 0.0
+            dom = max(pf_c.by_bound(), key=pf_c.by_bound().get)
+            dec_dom = max(dc_c.by_bound(), key=dc_c.by_bound().get)
+            flops = pf_c.flops + dc_c.flops
+            bytes_ = pf_c.bytes + dc_c.bytes
+        return CaseResult(case, latency, thr, mem, fits, dom, dec_dom,
+                          flops, bytes_, pf, dc, price_a, price_c, sys_cost,
+                          thr / sys_cost if sys_cost > 0 else 0.0)

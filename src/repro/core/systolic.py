@@ -17,7 +17,6 @@ systolic arrays are harder to fully utilize").
 from __future__ import annotations
 
 import functools
-import math
 
 import numpy as np
 

@@ -1,0 +1,79 @@
+"""Workload value type: the "what are we serving" axis of a Study (ISSUE 2).
+
+A Workload is a frozen, hashable description of one inference traffic shape:
+`batch` concurrent requests of `in_len` prompt tokens generating `out_len`
+output tokens, with the decode-KV trapezoid integrated over `samples` points
+(inference_model.generate). Because it is a value type it can key dicts,
+deduplicate across grids, and live inside a frozen study.Case.
+
+Presets cover the paper's six in/out evaluation shapes (Table IV / Fig. 10:
+256/256, 512/1024, 1024/1024, 2048/256, 256/2048, 2048/2048 at batch 16)
+and our serving shapes (DESIGN.md §5 assignment table analogues).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One inference traffic shape: batch x (in_len -> out_len)."""
+    batch: int
+    in_len: int
+    out_len: int
+    samples: int = 8        # decode-KV trapezoid sample points in generate()
+
+    @property
+    def total_len(self) -> int:
+        """Maximum resident context: prompt + every generated token."""
+        return self.in_len + self.out_len
+
+    @property
+    def tokens_in(self) -> int:
+        return self.batch * self.in_len
+
+    @property
+    def tokens_out(self) -> int:
+        return self.batch * self.out_len
+
+    @property
+    def tag(self) -> str:
+        return f"b{self.batch}_in{self.in_len}_out{self.out_len}"
+
+    def with_batch(self, batch: int) -> "Workload":
+        return replace(self, batch=batch)
+
+
+# The paper's six (in_len, out_len) evaluation shapes, in Fig. 10 order.
+PAPER_SHAPES: Tuple[Tuple[int, int], ...] = (
+    (256, 256), (512, 1024), (1024, 1024),
+    (2048, 256), (256, 2048), (2048, 2048))
+
+
+def paper_workloads(batch: int = 16, samples: int = 8) -> Dict[str, Workload]:
+    """The paper's six in/out shapes as named Workloads (Fig. 10: batch 16)."""
+    return {f"in{i}_out{o}": Workload(batch, i, o, samples)
+            for i, o in PAPER_SHAPES}
+
+
+# Our serving shapes: the traffic classes the launch/ stack plans for.
+SERVING_WORKLOADS: Dict[str, Workload] = {
+    "serve-chat": Workload(8, 2048, 256),          # planner probe workload
+    "serve-chat-batch64": Workload(64, 2048, 256),  # throughput-heavy chat
+    "serve-prefill-32k": Workload(32, 32768, 1),    # prefill_32k shape
+    "serve-decode-32k": Workload(16, 32768, 1024),  # decode_32k shape
+}
+
+WORKLOADS: Dict[str, Workload] = {
+    **{f"paper-{k}": v for k, v in paper_workloads().items()},
+    **SERVING_WORKLOADS,
+}
+
+
+def get_workload(name: str) -> Workload:
+    try:
+        return WORKLOADS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown workload preset '{name}'; have {sorted(WORKLOADS)}")

@@ -15,7 +15,6 @@ from __future__ import annotations
 import functools
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map

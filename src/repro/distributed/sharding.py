@@ -17,7 +17,6 @@ stacked-unit leading axes (models/lm.py) are skipped automatically.
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 import jax
 import numpy as np

@@ -2,7 +2,6 @@
 SwiGLU gate — elementwise Pallas kernels."""
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

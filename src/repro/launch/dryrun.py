@@ -22,7 +22,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import ARCHS, SHAPES, get_config, shape_applicable
 from ..configs.base import ModelConfig, ShapeConfig

@@ -15,11 +15,10 @@ from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 from dataclasses import dataclass
 
-from ..configs import ARCHS, SHAPES, get_config
+from ..configs import SHAPES, get_config
 from ..core import hardware as hw
 from ..core.evaluator import Evaluator
 from ..core.graph import Plan, build_model

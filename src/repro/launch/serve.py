@@ -16,7 +16,7 @@ import time
 
 import jax
 
-from ..configs import get_config, smoke_config
+from ..configs import get_config
 from .. import models
 from ..core import hardware as hw
 from ..core import planner

@@ -12,7 +12,6 @@ mesh.
 from __future__ import annotations
 
 import argparse
-import time
 from dataclasses import replace
 
 import jax

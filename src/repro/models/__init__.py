@@ -6,8 +6,6 @@ RWKV / RG-LRU / cross-attention / enc-dec structure.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

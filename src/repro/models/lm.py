@@ -17,8 +17,7 @@ Public entry points (all pure functions of (cfg, params, ...)):
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

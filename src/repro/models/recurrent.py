@@ -12,15 +12,13 @@ Both have single-step forms for serving decode.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ModelConfig
-from .layers import Params, _init, rms_norm
+from .layers import Params, _init
 
 # ---------------------------------------------------------------------------
 # RWKV6 time mix

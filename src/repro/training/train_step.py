@@ -9,8 +9,7 @@ in/out shardings the launcher attaches).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, smoke_config
-from repro import models
 from repro.checkpoint import Checkpointer
 from repro.distributed import (RestartManifest, remesh, StepMonitor,
                                FailureInjector)

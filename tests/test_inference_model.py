@@ -1,12 +1,11 @@
 """End-to-end inference model + planner (paper Sec. IV/V machinery)."""
-import math
 
 import pytest
 
 from repro.core import hardware as hw
 from repro.core import inference_model as im
 from repro.core import planner
-from repro.core.graph import Plan, layer_ops, model_ops
+from repro.core.graph import Plan, model_ops
 from repro.configs import get_config, ARCHS
 
 GPT3 = get_config("gpt3-175b")

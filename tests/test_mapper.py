@@ -1,6 +1,5 @@
 """Mapper + systolic model: unit and property tests (paper Sec. III-B1)."""
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 

@@ -1,5 +1,4 @@
 """Operator performance models (paper Sec. III-B3) + interconnect (III-B2)."""
-import math
 
 import pytest
 

@@ -1,6 +1,5 @@
 """Serving engine: batched generation, continuous batching slot refill,
 sampler behavior."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

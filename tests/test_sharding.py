@@ -19,7 +19,6 @@ def _fake_mesh(shape, axes):
     """Mesh over a single device repeated is illegal; build an abstract-ish
     mesh via np object array of the one device — only mesh.shape is used by
     the rules."""
-    import itertools
     n = int(np.prod(shape))
     dev = jax.devices()[0]
     arr = np.array([dev] * n).reshape(shape)

@@ -1,0 +1,279 @@
+"""ISSUE 2: Study API + device-axis mapper batching tests.
+
+Three layers of guarantees, mirroring test_ir_evaluator.py:
+  1. the device-axis stacked search (matmul_perf_batch_multi) reproduces
+     matmul_perf_reference per device, bit-for-bit (fixed grid + property);
+  2. a systems x configs x workloads Study grid reproduces the single-case
+     seed path (im.generate with a cold Evaluator), bit-for-bit, and matches
+     frozen seed-commit numbers (tests/data/seed_reference.json "study_grid",
+     captured from the single-case path before the Study refactor);
+  3. the Study API surface: stages, fits gating, rows/csv/best, per-device
+     pricing, and the MoE expert-parallel memory fix.
+"""
+import json
+import os
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import hardware as hw
+from repro.core import inference_model as im
+from repro.core.evaluator import Evaluator
+from repro.core.graph import Plan, layer_ops
+from repro.core.mapper import (clear_matmul_cache, matmul_perf_batch_multi,
+                               matmul_perf_reference)
+from repro.core.study import Case, Study
+from repro.core.workload import (PAPER_SHAPES, Workload, get_workload,
+                                 paper_workloads)
+from repro.configs import get_config
+
+REL = 1e-9
+_REF_PATH = os.path.join(os.path.dirname(__file__), "data",
+                         "seed_reference.json")
+
+
+def _rel(a, b):
+    return abs(a - b) / max(abs(b), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# 1. device-axis stacked search vs per-device dense reference
+# ---------------------------------------------------------------------------
+
+DEVICES = [hw.nvidia_a100(), hw.amd_mi210(), hw.google_tpu_v5e(),
+           hw.compute_design("C")]
+
+SHAPES = [(1, 128, 128, 1, 2, 2, False),
+          (16, 12288, 12288, 1, 2, 2, False),
+          (2048, 128, 2048, 8, 2, 2, True),
+          (333, 777, 129, 3, 2, 4, False)]
+
+
+def test_device_axis_batch_matches_reference_mixed_grid():
+    """All (device, shape) pairs in ONE stacked call == per-device dense."""
+    pairs = [(dev, sh) for dev in DEVICES for sh in SHAPES]
+    clear_matmul_cache()
+    out = matmul_perf_batch_multi(pairs)
+    clear_matmul_cache()
+    for (dev, sh), rb in zip(pairs, out):
+        rr = matmul_perf_reference(dev, sh[0], sh[1], sh[2], batch=sh[3],
+                                   bytes_in=sh[4], bytes_out=sh[5],
+                                   b_shared=sh[6])
+        assert rb.latency == rr.latency, (dev.name, sh)
+        assert rb.flops == rr.flops, (dev.name, sh)
+        assert rb.main_memory_bytes == rr.main_memory_bytes, (dev.name, sh)
+        assert rb.candidates_searched == rr.candidates_searched, (dev.name, sh)
+        assert rb.mapping == rr.mapping, (dev.name, sh)
+
+
+@given(m=st.sampled_from([1, 16, 77, 512, 4096]),
+       k=st.sampled_from([64, 500, 12288]),
+       n=st.sampled_from([1, 128, 3072]),
+       batch=st.sampled_from([1, 3, 8]))
+@settings(max_examples=15, deadline=None)
+def test_device_axis_batch_property(m, k, n, batch):
+    shape = (m, k, n, batch, 2, 2, False)
+    clear_matmul_cache()
+    out = matmul_perf_batch_multi([(d, shape) for d in DEVICES])
+    clear_matmul_cache()
+    for d, rb in zip(DEVICES, out):
+        rr = matmul_perf_reference(d, m, k, n, batch=batch)
+        assert rb.latency == rr.latency, d.name
+        assert rb.mapping == rr.mapping, d.name
+
+
+# ---------------------------------------------------------------------------
+# 2. Study grid vs single-case seed path + frozen numbers
+# ---------------------------------------------------------------------------
+
+def _grid_axes():
+    systems = [hw.dgx_a100(4), hw.tpu_v5e_pod(16)]
+    configs = [get_config("stablelm-1.6b"), get_config("qwen2-0.5b")]
+    wls = {"w512": Workload(4, 512, 64, samples=8),
+           "w256": Workload(2, 256, 32, samples=4)}
+    return systems, configs, Plan(tp=2, dp=2), wls
+
+
+def test_study_grid_matches_single_case_seed_path():
+    systems, configs, plan, wls = _grid_axes()
+    clear_matmul_cache()
+    res = Study(systems=systems, configs=configs, plans=[plan],
+                workloads=wls, enforce_fits=False).run()
+    assert len(res) == 8
+    assert res.stats.matmul_pairs_presolved > 0
+    for r in res:
+        clear_matmul_cache()          # cold single-case call, seed conditions
+        w = r.case.workload
+        g = im.generate(r.case.system, r.case.cfg, r.case.plan, w.batch,
+                        w.in_len, w.out_len, samples=w.samples)
+        assert r.latency == g.latency, r.case.label
+        assert r.throughput == im.throughput_from_generate(
+            g, r.case.plan, w.batch, w.out_len), r.case.label
+        assert r.flops == g.flops and r.bytes == g.bytes
+    clear_matmul_cache()
+
+
+def test_study_grid_matches_frozen_seed_commit_numbers():
+    ref = json.load(open(_REF_PATH))["study_grid"]
+    systems, configs, plan, wls = _grid_axes()
+    clear_matmul_cache()
+    res = Study(systems=systems, configs=configs, plans=[plan],
+                workloads=wls, enforce_fits=False).run()
+    clear_matmul_cache()
+    assert len(res) == len(ref)
+    for r in res:
+        sys_tag = f"{r.case.system.device.name}_x{r.case.system.device_count}"
+        lat, thr = ref[f"{r.case.cfg.name}/{sys_tag}/{r.case.label}"]
+        assert _rel(r.latency, lat) < REL, r.case.label
+        assert _rel(r.throughput, thr) < REL, r.case.label
+
+
+def test_study_layer_stage_matches_layer_ops():
+    """The layer stage reproduces the paper-microbenchmark convention."""
+    node = hw.dgx_a100(4)
+    cfg = get_config("gpt3-175b")
+    plan = Plan(tp=4)
+    r = Study(cases=[Case(node, cfg, plan, Workload(8, 2048, 1024),
+                          stage="layer")], enforce_fits=False).run()[0]
+    pf = layer_ops(cfg, node, plan, 0, batch=8, seq=2048, kv_len=2048)
+    dc = layer_ops(cfg, node, plan, 0, batch=8, seq=1, kv_len=3072)
+    assert _rel(r.prefill_latency, pf.latency) < REL
+    assert _rel(r.decode_latency, dc.latency) < REL
+    assert r.dominant == max(pf.by_bound(), key=pf.by_bound().get)
+    assert r.decode_dominant == max(dc.by_bound(), key=dc.by_bound().get)
+
+
+def test_study_prefill_decode_stages_match_inference_model():
+    node = hw.dgx_a100(4)
+    cfg = get_config("qwen2-0.5b")
+    plan = Plan(tp=2, dp=2)
+    w = Workload(4, 256, 128)
+    res = Study(cases=[Case(node, cfg, plan, w, stage="prefill"),
+                       Case(node, cfg, plan, w, stage="decode")]).run()
+    pf = im.prefill(node, cfg, plan, w.batch, w.in_len)
+    dc = im.decode_step(node, cfg, plan, w.batch, w.total_len)
+    assert _rel(res[0].latency, pf.latency) < REL
+    assert _rel(res[1].latency, dc.latency) < REL
+
+
+# ---------------------------------------------------------------------------
+# 3. API surface
+# ---------------------------------------------------------------------------
+
+def test_study_rows_csv_best():
+    node = hw.dgx_a100(4)
+    cfg = get_config("qwen2-0.5b")
+    res = Study(systems=[node], configs=[cfg],
+                plans=[Plan(tp=1, dp=4), Plan(tp=4)],
+                workloads={"w": Workload(2, 128, 16, samples=4)}).run()
+    rows = res.to_rows()
+    assert len(rows) == 2
+    assert {"latency_s", "throughput_tok_s", "fits", "perf_per_usd",
+            "dominant_bound", "area_mm2"} <= set(rows[0])
+    csv_text = res.to_csv()
+    assert csv_text.splitlines()[0].startswith("label,stage,device")
+    assert len(csv_text.splitlines()) == 3
+    assert res.best("latency").latency == min(r.latency for r in res)
+    assert res.best("throughput").throughput == \
+        max(r.throughput for r in res)
+    assert res.best("perf_per_dollar").perf_per_dollar == \
+        max(r.perf_per_dollar for r in res)
+    with pytest.raises(ValueError):
+        res.best("nonsense")
+
+
+def test_study_enforce_fits_skips_evaluation():
+    """GPT-3 on one A100 cannot fit: no evaluation cost, inf latency."""
+    node = hw.make_system(hw.nvidia_a100(), 1)
+    cfg = get_config("gpt3-175b")
+    res = Study(systems=[node], configs=[cfg], plans=[Plan()],
+                workloads=[Workload(1, 128, 16)]).run()
+    r = res[0]
+    assert not r.fits
+    assert r.latency == float("inf") and r.throughput == 0.0
+    assert res.stats.skipped_unfit == 1 and res.stats.evaluated == 0
+    with pytest.raises(ValueError):
+        res.best("latency")
+
+
+def test_study_prices_each_device_once():
+    """Same device in two systems -> identical per-device pricing columns."""
+    from repro.core import area, cost
+    dev = hw.nvidia_a100()
+    res = Study(systems=[hw.make_system(dev, 1), hw.make_system(dev, 4)],
+                configs=[get_config("qwen2-0.5b")], plans=[Plan()],
+                workloads=[Workload(1, 128, 8, samples=4)]).run()
+    a = area.device_area(dev, 600.0).total_mm2
+    c = cost.device_cost(dev, a).total_usd
+    for r in res:
+        assert r.area_mm2 == a
+        assert r.device_cost_usd == c
+        assert r.system_cost_usd == c * r.case.system.device_count
+
+
+def test_study_auto_plans_and_validation():
+    node = hw.tpu_v5e_pod(4)
+    cfg = get_config("qwen2-0.5b")
+    res = Study(systems=[node], configs=[cfg], plans="auto",
+                workloads=[Workload(2, 128, 16, samples=4)]).run()
+    from repro.core.planner import enumerate_plans
+    assert len(res) == len(enumerate_plans(node, cfg))
+    with pytest.raises(ValueError):
+        Study(systems=[node], configs=[cfg], workloads=[Workload(1, 8, 8)],
+              cases=[])
+    with pytest.raises(ValueError):
+        Case(node, cfg, Plan(), Workload(1, 8, 8), stage="warp")
+    with pytest.raises(ValueError):
+        Study(systems=[node], configs=[cfg], workloads=None)
+
+
+def test_study_rejects_mismatched_evaluator():
+    node = hw.dgx_a100(4)
+    other = hw.tpu_v5e_pod(16)
+    with pytest.raises(ValueError):
+        Study(cases=[Case(node, get_config("qwen2-0.5b"), Plan(),
+                          Workload(1, 64, 8))],
+              evaluators={node: Evaluator(other)}).run()
+
+
+def test_workload_presets():
+    assert len(PAPER_SHAPES) == 6
+    wls = paper_workloads(batch=16)
+    assert all(w.batch == 16 for w in wls.values())
+    assert [(w.in_len, w.out_len) for w in wls.values()] == list(PAPER_SHAPES)
+    w = get_workload("serve-chat")
+    assert (w.batch, w.in_len, w.out_len) == (8, 2048, 256)
+    assert w.total_len == 2304 and w.tag == "b8_in2048_out256"
+    assert w.with_batch(32).batch == 32
+    with pytest.raises(KeyError):
+        get_workload("nope")
+
+
+# ---------------------------------------------------------------------------
+# satellite: MoE expert-parallel memory sharding
+# ---------------------------------------------------------------------------
+
+def test_memory_per_device_shards_experts_by_ep():
+    cfg = get_config("granite-moe-3b-a800m")
+    assert cfg.n_experts > 1
+    base = im.memory_per_device(cfg, Plan(tp=1, dp=4, ep=1), 4, 2048)
+    ep4 = im.memory_per_device(cfg, Plan(tp=1, dp=4, ep=4), 4, 2048)
+    expert_bytes = cfg.n_layers * cfg.n_experts * cfg.mlp_params() * 2
+    # ep=4 drops exactly 3/4 of the expert FFN weight bytes
+    assert _rel(base - ep4, expert_bytes * 3 / 4) < REL
+    # dense models are unaffected by ep
+    dense = get_config("qwen2-0.5b")
+    assert im.memory_per_device(dense, Plan(ep=4), 4, 2048) == \
+        im.memory_per_device(dense, Plan(ep=1), 4, 2048)
+
+
+def test_moe_plan_fits_check_uses_sharded_experts():
+    """A system sized so granite-moe only fits when experts are sharded:
+    the planner must keep the ep>1 plan instead of wrongly rejecting it."""
+    cfg = get_config("granite-moe-3b-a800m")
+    plan = Plan(tp=1, dp=cfg.n_experts, ep=cfg.n_experts)
+    unsharded = im.memory_per_device(cfg, Plan(tp=1, dp=cfg.n_experts), 4,
+                                     2048)
+    sharded = im.memory_per_device(cfg, plan, 4, 2048)
+    assert sharded < unsharded

@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, smoke_config
-from repro import models
 from repro.training import (AdamW, cosine_schedule, constant_schedule,
                             make_train_step, init_state, compress_grads,
                             compress_int8, decompress_int8)
