@@ -23,7 +23,7 @@ def main(argv=None) -> None:
 
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
-                   mapper_speed, planner_archs, study_speed)
+                   mapper_speed, planner_archs, serving_sim, study_speed)
 
     if args.quick:
         modules = [
@@ -32,6 +32,7 @@ def main(argv=None) -> None:
             ("fig8_bandwidth", fig8_bandwidth, {}),
             ("fig9_buffers", fig9_buffers, {}),
             ("study_speed", study_speed, {"quick": True}),
+            ("serving_sim", serving_sim, {"quick": True}),
         ]
     else:
         modules = [
@@ -44,6 +45,7 @@ def main(argv=None) -> None:
             ("mapper_speed", mapper_speed, {}),
             ("planner_archs", planner_archs, {}),
             ("study_speed", study_speed, {}),
+            ("serving_sim", serving_sim, {}),
         ]
 
     print("name,us_per_call,derived")

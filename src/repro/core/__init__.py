@@ -1,9 +1,10 @@
 """LLMCompass core: the papers contribution as a composable library."""
 from . import hardware, systolic, mapper, operators, interconnect
-from . import ir, evaluator, workload
-from . import area, cost, graph, inference_model, study, planner, roofline
+from . import ir, evaluator, workload, scheduler
+from . import area, cost, graph, inference_model, simulator, study, planner
+from . import roofline
 
 __all__ = ["hardware", "systolic", "mapper", "operators", "interconnect",
-           "ir", "evaluator", "workload",
-           "area", "cost", "graph", "inference_model", "study", "planner",
-           "roofline"]
+           "ir", "evaluator", "workload", "scheduler",
+           "area", "cost", "graph", "inference_model", "simulator", "study",
+           "planner", "roofline"]

@@ -56,8 +56,12 @@ def _evaluator(system: System, evaluator: Optional[Evaluator]) -> Evaluator:
     return evaluator
 
 
-def _pp_fill(system: System, plan: Plan, tokens: int, d_model: int) -> float:
-    """Pipeline fill: (pp-1) p2p activation hand-offs for the first batch."""
+def pp_fill(system: System, plan: Plan, tokens: int, d_model: int) -> float:
+    """Pipeline fill: (pp-1) p2p activation hand-offs for the first batch.
+
+    Public (ISSUE 3): the serving simulator prices its prefill waves and
+    decode rounds with the same fill term generate() uses.
+    """
     if plan.pp <= 1:
         return 0.0
     return net.p2p(system, tokens * d_model * 2).latency * (plan.pp - 1)
@@ -68,7 +72,7 @@ def prefill(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     ev = _evaluator(system, evaluator)
     cost = ev.evaluate(build_model(cfg, plan, batch, seq, kv_len=seq))
     rep = _report(cost)
-    rep.latency += _pp_fill(system, plan, batch * seq, cfg.d_model)
+    rep.latency += pp_fill(system, plan, batch * seq, cfg.d_model)
     return rep
 
 
@@ -78,7 +82,7 @@ def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     ev = _evaluator(system, evaluator)
     cost = ev.evaluate(build_model(cfg, plan, batch, seq=1, kv_len=kv_len))
     rep = _report(cost)
-    rep.latency += _pp_fill(system, plan, batch, cfg.d_model)
+    rep.latency += pp_fill(system, plan, batch, cfg.d_model)
     return rep
 
 
@@ -110,24 +114,48 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     costs = ev.evaluate_many(graphs)
 
     pf = _report(costs[0])
-    pf.latency += _pp_fill(system, plan, batch * in_len, cfg.d_model)
-    dec_fill = _pp_fill(system, plan, batch, cfg.d_model)
+    pf_fill = pp_fill(system, plan, batch * in_len, cfg.d_model)
+    pf.latency += pf_fill
+    dec_fill = pp_fill(system, plan, batch, cfg.d_model)
     lats = [c.latency + dec_fill for c in costs[1:]]
 
     total = pf.latency
-    flops, bytes_ = pf.flops, pf.bytes
     dec = 0.0
+    # per-sample trapezoid weights: sample i carries wts[i] of the out_len-1
+    # integrated decode steps, +1 at pts[0] for the first token
+    wts = [0.0] * samples
     for i in range(samples - 1):
         w = pts[i + 1] - pts[i] if i < samples - 2 \
             else out_len - 1 - (pts[i] - in_len)
         dec += (lats[i] + lats[i + 1]) / 2 * max(w, 0)
+        wts[i] += max(w, 0) / 2
+        wts[i + 1] += max(w, 0) / 2
     if out_len == 1:
         dec = 0.0
-    total += dec + lats[0]      # +1 first token
+        wts = [0.0] * samples
+    wts[0] += 1.0               # +1 first token
+    total += dec + lats[0]
+    # aggregate flops/bytes/bound over prefill + the integrated decode steps
+    # (the decode graphs carry the same weights their latencies were
+    # integrated with), so PerfReport.dominant reflects the whole generation
+    # instead of just the prefill pass
+    flops, bytes_ = pf.flops, pf.bytes
+    bound = dict(pf.bound)
+    if pf_fill > 0:
+        bound["link"] = bound.get("link", 0.0) + pf_fill
+    for w, c in zip(wts, costs[1:]):
+        if w <= 0:
+            continue
+        flops += c.flops * w
+        bytes_ += c.bytes * w
+        for k, v in c.by_bound().items():
+            bound[k] = bound.get(k, 0.0) + v * w
+        if dec_fill > 0:
+            bound["link"] = bound.get("link", 0.0) + dec_fill * w
     rep = PerfReport(latency=total, flops=flops, bytes=bytes_,
                      breakdown={"prefill": pf.latency,
                                 "decode": dec + lats[0]},
-                     bound=pf.bound)
+                     bound=bound)
     return rep
 
 

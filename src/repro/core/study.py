@@ -38,7 +38,8 @@ from .graph import Plan, build_layer, build_model
 from .hardware import Device, System
 from .ir import Graph, MatmulSpec
 from .mapper import is_memoized, matmul_perf_batch_multi
-from .workload import Workload
+from . import simulator as sim_mod
+from .workload import TrafficWorkload, Workload
 
 #: evaluation stages a Case can request
 #:   generate — prefill + decode trapezoid (the end-to-end request metric)
@@ -47,7 +48,9 @@ from .workload import Workload
 #:   layer    — single-layer prefill AND decode microbenchmark (paper
 #:              Table III / Fig. 8 / Fig. 9 convention: prefill at seq=in_len,
 #:              decode at kv = in_len + out_len, no lm head, no pipeline fill)
-STAGES = ("generate", "prefill", "decode", "layer")
+#:   serve    — trace-driven continuous-batching replay (core/simulator.py);
+#:              requires a TrafficWorkload (slots + trace + policy)
+STAGES = ("generate", "prefill", "decode", "layer", "serve")
 
 
 @dataclass(frozen=True)
@@ -63,6 +66,10 @@ class Case:
     def __post_init__(self):
         if self.stage not in STAGES:
             raise ValueError(f"unknown stage {self.stage!r}; have {STAGES}")
+        if self.stage == "serve" and not isinstance(self.workload,
+                                                    TrafficWorkload):
+            raise ValueError("stage='serve' needs a TrafficWorkload "
+                             "(slots + trace + policy)")
 
 
 @dataclass(frozen=True)
@@ -83,10 +90,12 @@ class CaseResult:
     device_cost_usd: float      # manufacturing cost of ONE device
     system_cost_usd: float      # device cost x device_count
     perf_per_dollar: float      # throughput / system_cost_usd
+    sim: Optional[sim_mod.SimResult] = None   # serve stage: the full replay
 
     def to_row(self) -> dict:
         c = self.case
         w = c.workload
+        s = self.sim
         return {
             "label": c.label, "stage": c.stage,
             "device": c.system.device.name,
@@ -105,6 +114,10 @@ class CaseResult:
             "area_mm2": self.area_mm2,
             "system_cost_usd": self.system_cost_usd,
             "perf_per_usd": self.perf_per_dollar,
+            "ttft_p50_s": s.ttft(50) if s else "",
+            "ttft_p99_s": s.ttft(99) if s else "",
+            "tpot_p50_s": s.tpot(50) if s else "",
+            "goodput_tok_s": s.goodput if s else "",
         }
 
 
@@ -296,6 +309,8 @@ class Study:
         if case.stage == "decode":
             return [build_model(cfg, plan, w.batch, seq=1,
                                 kv_len=w.total_len)]
+        if case.stage == "serve":
+            return sim_mod.trace_graphs(cfg, plan, w)
         # layer: single-layer prefill + decode microbenchmark graphs
         return [build_layer(cfg, plan, 0, w.batch, w.in_len, w.in_len),
                 build_layer(cfg, plan, 0, w.batch, 1, w.total_len)]
@@ -381,7 +396,14 @@ class Study:
                   sys_cost: float) -> CaseResult:
         w, cfg, plan, system = case.workload, case.cfg, case.plan, case.system
         dec_dom = "n/a"
-        if case.stage == "generate":
+        sim = None
+        if case.stage == "serve":
+            sim = sim_mod.simulate(system, cfg, plan, w, evaluator=ev)
+            latency = sim.e2e(50)           # median request e2e
+            thr = sim.goodput
+            pf, dc = sim.prefill_busy, sim.decode_busy
+            dom, flops, bytes_ = sim.dominant, sim.flops, sim.bytes
+        elif case.stage == "generate":
             rep = im.generate(system, cfg, plan, w.batch, w.in_len, w.out_len,
                               samples=w.samples, evaluator=ev)
             latency = rep.latency
@@ -413,4 +435,4 @@ class Study:
             bytes_ = pf_c.bytes + dc_c.bytes
         return CaseResult(case, latency, thr, mem, fits, dom, dec_dom,
                           flops, bytes_, pf, dc, price_a, price_c, sys_cost,
-                          thr / sys_cost if sys_cost > 0 else 0.0)
+                          thr / sys_cost if sys_cost > 0 else 0.0, sim=sim)

@@ -1,4 +1,5 @@
 from .engine import Engine, Request
-from .sampler import SamplingParams, sample
+from .sampler import SamplingParams, sample, sample_per_request
 
-__all__ = ["Engine", "Request", "SamplingParams", "sample"]
+__all__ = ["Engine", "Request", "SamplingParams", "sample",
+           "sample_per_request"]

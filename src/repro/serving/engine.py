@@ -1,11 +1,15 @@
 """Serving engine: batched prefill + continuous-batching decode.
 
 Slot model (vLLM-style, static shapes for XLA):
-  * the engine owns `batch_size` slots and one cache pytree;
+  * the engine owns `batch_size` slots and one cache pytree; slot admission,
+    budgets and refill-on-completion live in `core.scheduler.SlotScheduler`
+    — the SAME policy object the analytical simulator (core/simulator.py)
+    replays, so simulated schedules are about this exact code;
   * prefill runs per admission wave (right-padded prompts, per-sequence
     prompt_lens); finished slots are refilled by single-prompt prefill into
     a fresh batch-1 cache that is scattered into the slot (jitted);
-  * decode advances all live slots every step (dead slots masked).
+  * decode advances all live slots every step (dead slots masked), sampling
+    every slot with its own request's SamplingParams.
 
 Recurrent/hybrid archs (state pollution from right pads) are admitted in
 equal-length buckets — the scheduler handles that transparently.
@@ -21,8 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.scheduler import SlotScheduler
 from .. import models
-from .sampler import SamplingParams, sample
+from .sampler import SamplingParams, sample_per_request
 
 
 @dataclass
@@ -38,15 +43,14 @@ class Request:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
-                 max_len: int, seed: int = 0):
+                 max_len: int, seed: int = 0, policy: str = "continuous"):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.cache = models.init_cache(cfg, batch_size, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * batch_size
-        self.slot_budget = np.zeros(batch_size, np.int32)
+        self.sched = SlotScheduler(batch_size, policy=policy)
         self._prefill = jax.jit(
             lambda p, t, c, l, f: models.prefill(cfg, p, t, c, frontend=f,
                                                  prompt_lens=l))
@@ -55,6 +59,14 @@ class Engine:
         self._insert = jax.jit(self._insert_impl, static_argnames=("slot",))
         self.stats = {"tokens_out": 0, "prefill_s": 0.0, "decode_s": 0.0,
                       "steps": 0}
+
+    @property
+    def slot_req(self) -> List[Optional[Request]]:
+        return self.sched.slot_req
+
+    @property
+    def slot_budget(self) -> List[int]:
+        return self.sched.slot_budget
 
     # ------------------------------------------------------------------
     def _insert_impl(self, cache, one_cache, slot: int):
@@ -74,12 +86,12 @@ class Engine:
     # ------------------------------------------------------------------
     def admit_wave(self, requests: List[Request]):
         """Prefill a wave of requests into free slots (right-padded)."""
-        free = [i for i, r in enumerate(self.slot_req) if r is None]
-        wave = requests[:len(free)]
-        if not wave:
+        pairs = self.sched.plan_wave(requests)
+        if not pairs:
             return []
+        wave = [r for _, r in pairs]
         t0 = time.perf_counter()
-        if all(r is None for r in self.slot_req):
+        if self.sched.idle:
             # whole-batch prefill path
             S = max(max(len(r.prompt) for r in wave), 1)
             toks = np.zeros((self.B, S), np.int32)
@@ -91,19 +103,24 @@ class Engine:
             logits, self.cache = self._prefill(
                 self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(lens), None)
-            first = np.asarray(jnp.argmax(logits, -1), np.int32)
+            self.key, sub = jax.random.split(self.key)
+            first = np.asarray(sample_per_request(
+                logits[:len(wave)], sub, [r.sampling for r in wave]),
+                np.int32)
             for i, r in enumerate(wave):
                 self._admit_slot(i, r, int(first[i]))
         else:
             # per-slot insertion
-            for slot, r in zip(free, wave):
+            for slot, r in pairs:
                 one = models.init_cache(self.cfg, 1, self.max_len)
                 toks = jnp.asarray([r.prompt], jnp.int32)
                 lens = jnp.asarray([len(r.prompt)], jnp.int32)
                 logits, one = self._prefill(self.params, toks, one, lens,
                                             None)
                 self.cache = self._insert(self.cache, one, slot=slot)
-                self._admit_slot(slot, r, int(np.asarray(jnp.argmax(logits[0]))))
+                self.key, sub = jax.random.split(self.key)
+                first = sample_per_request(logits[:1], sub, [r.sampling])
+                self._admit_slot(slot, r, int(np.asarray(first[0])))
         self.stats["prefill_s"] += time.perf_counter() - t0
         return wave
 
@@ -115,44 +132,42 @@ class Engine:
         if (r.max_new_tokens <= 1
                 or (r.eos_id >= 0 and first_token == r.eos_id)):
             r.done = True
-            self.slot_req[slot] = None
             return
-        self.slot_req[slot] = r
-        self.slot_budget[slot] = r.max_new_tokens - 1
+        self.sched.admit(slot, r, r.max_new_tokens - 1)
 
     # ------------------------------------------------------------------
     def decode_round(self):
-        """One decode step for all live slots."""
-        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        """One decode step for all live slots (dead slots stay masked;
+        each live slot samples with its own request's SamplingParams)."""
+        live = self.sched.live_slots()
         if not live:
             return
         t0 = time.perf_counter()
         tok = np.zeros((self.B,), np.int32)
         for i in live:
-            tok[i] = self.slot_req[i].output[-1]
+            tok[i] = self.sched.slot_req[i].output[-1]
         logits, self.cache = self._decode(self.params, jnp.asarray(tok),
                                           self.cache)
         self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(sample(logits, sub,
-                                self.slot_req[live[0]].sampling), np.int32)
+        nxt = np.asarray(sample_per_request(
+            logits[jnp.asarray(live)], sub,
+            [self.sched.slot_req[i].sampling for i in live]), np.int32)
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["steps"] += 1
-        for i in live:
-            r = self.slot_req[i]
-            r.output.append(int(nxt[i]))
+        for j, i in enumerate(live):
+            r = self.sched.slot_req[i]
+            r.output.append(int(nxt[j]))
             self.stats["tokens_out"] += 1
-            self.slot_budget[i] -= 1
-            if (self.slot_budget[i] <= 0
-                    or (r.eos_id >= 0 and r.output[-1] == r.eos_id)):
+            hit_eos = r.eos_id >= 0 and r.output[-1] == r.eos_id
+            if self.sched.step(i, hit_eos=hit_eos):
                 r.done = True
-                self.slot_req[i] = None
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request]) -> List[Request]:
         """Offline serve: continuous batching until all requests finish."""
         pending = list(requests)
         submitted: List[Request] = []
-        while pending or any(r is not None for r in self.slot_req):
+        while pending or not self.sched.idle:
             if pending:
                 wave = self.admit_wave(pending)
                 submitted += wave

@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -30,3 +32,32 @@ def sample(logits, key, params: SamplingParams):
         cutoff = jnp.take_along_axis(sorted_, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_per_request(logits, key, params: Sequence[SamplingParams]):
+    """Per-row sampling: logits (B, V) with one SamplingParams PER ROW.
+
+    Rows sharing identical params are sampled together through `sample`
+    (greedy rows stay a pure argmax and never consume randomness, so a
+    greedy request's stream is deterministic regardless of its batch
+    neighbors — the ISSUE 3 engine regression). Each non-greedy group draws
+    a subkey `fold_in`ed with the group's first row index so distinct groups
+    in one call never share a draw; non-greedy streams are reproducible for
+    a fixed seed and schedule, but (like any batched sampler) the concrete
+    draws do shift when batch composition changes. Returns (B,) int32.
+    """
+    if len(params) != logits.shape[0]:
+        raise ValueError(f"{len(params)} params for {logits.shape[0]} rows")
+    groups: dict = {}
+    for i, p in enumerate(params):
+        groups.setdefault(p, []).append(i)
+    if len(groups) == 1:
+        (p, _), = groups.items()
+        return sample(logits, key, p)
+    out = np.zeros(logits.shape[0], np.int32)
+    for p, rows in groups.items():
+        sub = key if p.temperature <= 0.0 else jax.random.fold_in(key,
+                                                                  rows[0])
+        out[np.asarray(rows)] = np.asarray(
+            sample(logits[jnp.asarray(rows)], sub, p), np.int32)
+    return jnp.asarray(out)

@@ -1,0 +1,227 @@
+"""ISSUE 3: trace-driven serving simulator + shared scheduler + traces.
+
+Guarantees, by layer:
+  1. SlotScheduler policy unit behavior (the engine and the simulator run
+     THIS code — its admission/budget rules are the contract);
+  2. Trace constructors: reproducible, sorted, length specs respected;
+  3. simulator conservation (tokens emitted == sum of trace out_lens, all
+     requests finish, occupancy bounded by slots) and consistency: a
+     constant-arrival uniform trace reproduces inference_model.generate /
+     throughput within 1% from one stacked mapper search;
+  4. the Study serve stage: TrafficWorkload axis, SimResult plumbing;
+  5. the generate() bound-aggregation bugfix (decode-bound generations must
+     not report the prefill's compute bound).
+"""
+import pytest
+
+from repro.core import hardware as hw
+from repro.core import inference_model as im
+from repro.core.evaluator import Evaluator
+from repro.core.graph import Plan
+from repro.core.mapper import clear_matmul_cache
+from repro.core.scheduler import SlotScheduler
+from repro.core.simulator import simulate, trace_graphs
+from repro.core.study import Case, Study
+from repro.core.workload import Trace, TrafficWorkload, Workload
+from repro.configs import get_config
+
+A100 = hw.make_system(hw.nvidia_a100(), 1)
+CFG = get_config("qwen2-0.5b")
+PLAN = Plan()
+
+
+# ---------------------------------------------------------------------------
+# 1. SlotScheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_continuous_admits_greedily():
+    s = SlotScheduler(2, policy="continuous")
+    assert s.plan_wave(["a", "b", "c"]) == [(0, "a"), (1, "b")]
+    s.admit(0, "a", 2)
+    assert s.plan_wave(["b"], more_coming=True) == [(1, "b")]
+    s.admit(1, "b", 1)
+    assert s.plan_wave(["c"]) == []           # no free slots
+    assert s.step(1) and s.slot_req[1] is None  # budget 1 -> done
+    assert not s.step(0)                        # budget 2 -> one left
+    assert s.plan_wave(["c"]) == [(1, "c")]     # refill the freed slot
+
+
+def test_scheduler_static_waits_for_drain_and_full_batch():
+    s = SlotScheduler(2, policy="static")
+    # partial batch is held while more arrivals may come, admitted otherwise
+    assert s.plan_wave(["a"], more_coming=True) == []
+    assert s.plan_wave(["a"], more_coming=False) == [(0, "a")]
+    s.admit(0, "a", 2)
+    # busy scheduler never admits, even a full waiting batch
+    assert s.plan_wave(["b", "c"], more_coming=False) == []
+    s.step(0)
+    s.step(0)
+    assert s.idle
+    assert s.plan_wave(["b", "c"]) == [(0, "b"), (1, "c")]
+
+
+def test_scheduler_admit_and_step_validate():
+    s = SlotScheduler(1)
+    assert not s.admit(0, "a", 0)     # exhausted budget leaves slot free
+    assert s.slot_req[0] is None
+    s.admit(0, "a", 5)
+    with pytest.raises(ValueError):
+        s.admit(0, "b", 3)
+    assert s.step(0, hit_eos=True)    # eos releases regardless of budget
+    with pytest.raises(ValueError):
+        s.step(0)
+    with pytest.raises(ValueError):
+        SlotScheduler(2, policy="warp")
+
+
+# ---------------------------------------------------------------------------
+# 2. traces
+# ---------------------------------------------------------------------------
+
+def test_trace_constructors_reproducible_and_sorted():
+    a = Trace.poisson(20, rate=5.0, in_len=(32, 64), out_len=8, seed=3)
+    b = Trace.poisson(20, rate=5.0, in_len=(32, 64), out_len=8, seed=3)
+    assert a == b and len(a) == 20
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] > 0
+    assert all(32 <= r.in_len <= 64 and r.out_len == 8 for r in a)
+    g = Trace.gamma(10, rate=5.0, cv=2.0, in_len=16, out_len=(4, 8), seed=1)
+    assert all(4 <= r.out_len <= 8 for r in g)
+    c = Trace.constant(4, 0.5, 16, 4)
+    assert [r.arrival for r in c] == [0.0, 0.5, 1.0, 1.5]
+    e = Trace.explicit([(0.2, 8, 2), (0.1, 4, 1)])
+    assert [r.arrival for r in e] == [0.1, 0.2]   # re-sorted
+    assert e.max_total_len == 10 and e.tokens_out == 3
+
+
+def test_traffic_workload_axis():
+    tr = Trace.constant(6, 0.1, (16, 32), (4, 8), seed=0)
+    w = TrafficWorkload.from_trace(tr, slots=4, policy="static")
+    assert w.batch == 4 and w.in_len == tr.max_in_len
+    assert w.total_len == tr.max_total_len
+    assert hash(w) == hash(TrafficWorkload.from_trace(tr, slots=4,
+                                                      policy="static"))
+    assert "static" in w.tag
+    with pytest.raises(ValueError):
+        TrafficWorkload.from_trace(Trace(()), slots=4)
+
+
+# ---------------------------------------------------------------------------
+# 3. simulator conservation + consistency
+# ---------------------------------------------------------------------------
+
+def test_simulator_conserves_tokens_mixed_traffic():
+    trace = Trace.poisson(24, rate=30.0, in_len=(16, 96), out_len=(4, 24),
+                          seed=11)
+    for policy in ("continuous", "static"):
+        w = TrafficWorkload.from_trace(trace, slots=4, policy=policy,
+                                       kv_samples=4, seq_samples=4)
+        r = simulate(A100, CFG, PLAN, w)
+        assert r.tokens_out == trace.tokens_out, policy
+        assert all(q.emitted == q.out_len for q in r.requests), policy
+        assert all(q.e2e >= q.ttft > 0 for q in r.requests), policy
+        assert all(0 <= live <= 4 for _, live in r.occupancy), policy
+        assert r.makespan >= trace.requests[-1].arrival
+        assert r.prefill_busy + r.decode_busy + r.idle <= r.makespan + 1e-9
+
+
+def test_simulator_matches_generate_and_throughput():
+    """One uniform admission wave == the closed-form generate()/throughput()
+    numbers within 1% (acceptance criterion), from ONE stacked search."""
+    B, I, O = 4, 128, 32
+    clear_matmul_cache()
+    ev = Evaluator(A100)
+    w = TrafficWorkload.from_trace(Trace.constant(B, 0.0, I, O), slots=B)
+    r = simulate(A100, CFG, PLAN, w, evaluator=ev)
+    assert ev.stats.batched_searches == 1     # no per-step re-search
+    g = im.generate(A100, CFG, PLAN, B, I, O, evaluator=ev)
+    thr = im.throughput(A100, CFG, PLAN, B, I, O, evaluator=ev)
+    clear_matmul_cache()
+    assert abs(r.e2e(50) - g.latency) / g.latency < 0.01
+    assert abs(r.e2e(99) - g.latency) / g.latency < 0.01
+    assert abs(r.goodput - thr) / thr < 0.01
+    # TTFT analog: prefill + first decode round
+    assert r.ttft(50) < g.breakdown["prefill"] * 1.5
+
+
+def test_simulator_continuous_beats_static_ttft():
+    trace = Trace.poisson(16, rate=20.0, in_len=64, out_len=16, seed=5)
+    res = {}
+    for policy in ("continuous", "static"):
+        w = TrafficWorkload.from_trace(trace, slots=4, policy=policy,
+                                       kv_samples=4)
+        res[policy] = simulate(A100, CFG, PLAN, w)
+    assert res["continuous"].ttft(99) < res["static"].ttft(99)
+    assert res["continuous"].waves >= res["static"].waves
+
+
+def test_simulator_validates_trace():
+    with pytest.raises(ValueError):
+        simulate(A100, CFG, PLAN,
+                 TrafficWorkload(batch=2, in_len=8, out_len=1))
+    bad = TrafficWorkload(batch=1, in_len=8, out_len=1,
+                          trace=Trace.explicit([(0.0, 8, 0)]))
+    with pytest.raises(ValueError):
+        simulate(A100, CFG, PLAN, bad)
+
+
+# ---------------------------------------------------------------------------
+# 4. Study serve stage
+# ---------------------------------------------------------------------------
+
+def test_study_serve_stage():
+    trace = Trace.poisson(8, rate=20.0, in_len=(16, 64), out_len=8, seed=2)
+    wls = [TrafficWorkload.from_trace(trace, slots=2, policy=p,
+                                      kv_samples=4, seq_samples=4)
+           for p in ("continuous", "static")]
+    res = Study(systems=[A100], configs=[CFG], plans=[PLAN],
+                workloads=wls, stage="serve").run()
+    assert len(res) == 2
+    assert res.stats.matmul_pairs_presolved > 0
+    for r in res:
+        assert r.sim is not None
+        assert r.throughput == r.sim.goodput
+        assert r.latency == r.sim.e2e(50)
+        assert r.sim.tokens_out == trace.tokens_out
+        row = r.to_row()
+        assert row["goodput_tok_s"] == r.sim.goodput
+        assert row["ttft_p99_s"] == r.sim.ttft(99)
+    # non-serve rows keep the columns, empty
+    assert Study(systems=[A100], configs=[CFG], plans=[PLAN],
+                 workloads=[Workload(1, 32, 4, samples=4)]
+                 ).run()[0].to_row()["goodput_tok_s"] == ""
+
+
+def test_study_serve_stage_requires_traffic_workload():
+    with pytest.raises(ValueError):
+        Case(A100, CFG, PLAN, Workload(4, 128, 16), stage="serve")
+
+
+def test_trace_graphs_cover_axes():
+    trace = Trace.poisson(6, rate=10.0, in_len=(16, 48), out_len=8, seed=0)
+    w = TrafficWorkload.from_trace(trace, slots=4, kv_samples=4,
+                                   seq_samples=3)
+    graphs = trace_graphs(CFG, PLAN, w)
+    assert len(graphs) >= 3           # wave prefills + refills + decodes
+    assert all(len(g) > 0 for g in graphs)
+
+
+# ---------------------------------------------------------------------------
+# 5. generate() bound aggregation (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_generate_bound_aggregates_decode():
+    """A decode-heavy generation must be memory-bound end-to-end even though
+    its prefill pass alone is compute-bound (the seed reported the latter)."""
+    gpt3 = get_config("gpt3-175b")
+    node = hw.dgx_a100(4)
+    plan = Plan(tp=4)
+    g = im.generate(node, gpt3, plan, 8, 512, 512)
+    pf = im.prefill(node, gpt3, plan, 8, 512)
+    assert pf.dominant == "compute"
+    assert g.breakdown["decode"] > g.breakdown["prefill"]
+    assert g.dominant == "memory"
+    # bound buckets must account for (almost all of) the total latency
+    assert sum(g.bound.values()) == pytest.approx(g.latency, rel=0.05)
+    # flops/bytes now cover prefill + decode, not prefill alone
+    assert g.flops > pf.flops and g.bytes > pf.bytes
