@@ -23,7 +23,8 @@ def main(argv=None) -> None:
 
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
-                   mapper_speed, planner_archs, serving_sim, study_speed)
+                   mapper_speed, planner_archs, precision_sweep, serving_sim,
+                   study_speed)
 
     if args.quick:
         modules = [
@@ -33,6 +34,7 @@ def main(argv=None) -> None:
             ("fig9_buffers", fig9_buffers, {}),
             ("study_speed", study_speed, {"quick": True}),
             ("serving_sim", serving_sim, {"quick": True}),
+            ("precision_sweep", precision_sweep, {"quick": True}),
         ]
     else:
         modules = [
@@ -46,6 +48,7 @@ def main(argv=None) -> None:
             ("planner_archs", planner_archs, {}),
             ("study_speed", study_speed, {}),
             ("serving_sim", serving_sim, {}),
+            ("precision_sweep", precision_sweep, {}),
         ]
 
     print("name,us_per_call,derived")

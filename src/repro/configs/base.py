@@ -144,8 +144,10 @@ class ModelConfig:
         dense = self.param_count() - self.n_layers * self.n_experts * self.mlp_params()
         return dense + self.n_layers * self.top_k * self.mlp_params()
 
-    def kv_bytes_per_token(self, bytes_per: int = 2) -> int:
-        """KV-cache bytes per token across all (attention) layers."""
+    def kv_bytes_per_token(self, bytes_per: float = 2) -> float:
+        """KV-cache bytes per token across all (attention) layers, at the
+        given element width (core/precision.py policies pass theirs;
+        fractional for sub-byte types)."""
         per_layer = 2 * self.n_kv_heads * self.d_head * bytes_per
         n_attn = sum(1 for i in range(self.n_layers)
                      if self.block_kind(i) == "attn")

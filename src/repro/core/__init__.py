@@ -1,10 +1,10 @@
 """LLMCompass core: the papers contribution as a composable library."""
 from . import hardware, systolic, mapper, operators, interconnect
-from . import ir, evaluator, workload, scheduler
+from . import ir, evaluator, workload, scheduler, precision
 from . import area, cost, graph, inference_model, simulator, study, planner
 from . import roofline
 
 __all__ = ["hardware", "systolic", "mapper", "operators", "interconnect",
-           "ir", "evaluator", "workload", "scheduler",
+           "ir", "evaluator", "workload", "scheduler", "precision",
            "area", "cost", "graph", "inference_model", "simulator", "study",
            "planner", "roofline"]

@@ -16,17 +16,30 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .hardware import Device, MB
+from .precision import DTYPES
 
 UM2 = 1e-6   # um^2 -> mm^2
 
 # --- Table II constants (7nm) ----------------------------------------------
 AREA_FP64_FPU = 7116 * UM2
 AREA_FP32_FPU = AREA_FP64_FPU / 2          # half-width datapath
-AREA_FP16_MAC = 1150 * UM2                 # systolic PE; ~FP64/6 datapath.
-#   Calibrated (with the fabric constant below) so the model reproduces the
-#   paper's own Table IV triple exactly-ish: GA100 826 / latency 478 /
-#   throughput 787 mm^2 form a linear system in (MAC area, fabric, IO) —
-#   solving it gives 1150 um^2/MAC, 1.45 mm^2/core fabric, 130 mm^2 mem+IO.
+
+# Systolic PE area, per native datapath dtype (ISSUE 4). The fp16 MAC is
+# THE calibrated constant: together with the fabric constant below it makes
+# the model reproduce the paper's own Table IV triple exactly-ish — GA100
+# 826 / latency 478 / throughput 787 mm^2 form a linear system in
+# (MAC area, fabric, IO); solving it gives 1150 um^2/MAC, 1.45 mm^2/core
+# fabric, 130 mm^2 mem+IO. (This note is the single home of that fit;
+# lane_area and the device breakdown both read the table through
+# _lane_parts, so the constant is applied in exactly one place.)
+# Narrow datapaths scale by the registry's per-dtype multiplier-area ratios
+# (precision.DTYPES.mac_area_rel: ~quadratic in operand width, fixed-point
+# cheaper than floating) — derived, so a new registry dtype prices here
+# automatically.
+MAC_UM2_FP16 = 1150
+MAC_AREA = {name: d.mac_area_rel * MAC_UM2_FP16 * UM2
+            for name, d in DTYPES.items()}
+AREA_FP16_MAC = MAC_AREA["fp16"]           # back-compat alias
 AREA_INT32_ALU = 1838 * UM2
 AREA_LANE_OVERHEAD = 10344 * UM2
 AREA_CORE_OVERHEAD = 460000 * UM2          # Table II per-core overhead
@@ -60,12 +73,27 @@ class AreaReport:
                 + self.memory_io_mm2 + self.link_phy_mm2)
 
 
-def lane_area(device: Device) -> float:
+def _lane_parts(device: Device) -> dict:
+    """Per-lane area components — the one place the unit constants are
+    applied (lane_area and the device breakdown both sum these)."""
     lane = device.core.lane
-    vec = lane.vector_unit.width * AREA_FP32_FPU
-    sa = lane.systolic_array.macs * AREA_FP16_MAC
-    rf = (lane.register_file_bytes / MB) / device.core.lanes * REGFILE_MM2_PER_MB
-    return vec + sa + rf + AREA_LANE_OVERHEAD
+    sa = lane.systolic_array
+    try:
+        mac = MAC_AREA[sa.dtype]
+    except KeyError:
+        raise KeyError(f"no MAC area entry for systolic dtype {sa.dtype!r}; "
+                       f"have {sorted(MAC_AREA)}")
+    return {
+        "vector_units": lane.vector_unit.width * AREA_FP32_FPU,
+        "systolic_arrays": sa.macs * mac,
+        "register_files": (lane.register_file_bytes / MB)
+        / device.core.lanes * REGFILE_MM2_PER_MB,
+        "lane_overhead": AREA_LANE_OVERHEAD,
+    }
+
+
+def lane_area(device: Device) -> float:
+    return sum(_lane_parts(device).values())
 
 
 def core_area(device: Device) -> float:
@@ -95,16 +123,11 @@ def device_area(device: Device, link_bandwidth_gbps: float = 600.0) -> AreaRepor
     rep = AreaReport(
         lane_mm2=la, core_mm2=ca, cores_total_mm2=cores,
         global_buffer_mm2=gb, memory_io_mm2=mem_io, link_phy_mm2=link)
-    vec = device.core.lane.vector_unit.width * AREA_FP32_FPU
-    sa = device.core.lane.systolic_array.macs * AREA_FP16_MAC
+    parts = _lane_parts(device)
     rep.breakdown = {
-        "vector_units": device.total_lanes * vec,
-        "systolic_arrays": device.total_lanes * sa,
-        "register_files": device.core_count * (
-            device.core.lane.register_file_bytes / MB) * REGFILE_MM2_PER_MB,
+        **{k: device.total_lanes * v for k, v in parts.items()},
         "local_buffers": device.core_count
         * (device.core.local_buffer_bytes / MB) * SRAM_LOCAL_MM2_PER_MB,
-        "lane_overhead": device.total_lanes * AREA_LANE_OVERHEAD,
         "core_overhead": device.core_count
         * (AREA_CORE_OVERHEAD + AREA_CORE_FABRIC),
         "global_buffer": gb,

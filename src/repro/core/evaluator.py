@@ -88,14 +88,13 @@ class Evaluator:
             if self.use_reference_mapper:
                 from .mapper import matmul_perf_reference
                 r = matmul_perf_reference(dev, spec.m, spec.k, spec.n,
-                                          spec.batch, spec.bytes_in,
-                                          spec.bytes_out, spec.b_shared)
+                                          spec.batch, spec.bytes_a,
+                                          spec.bytes_b, spec.bytes_out,
+                                          spec.bytes_acc, spec.b_shared,
+                                          spec.mac_scale)
             else:
                 self.stats.batched_searches += 1
-                r = matmul_perf_batch(dev, [(spec.m, spec.k, spec.n,
-                                             spec.batch, spec.bytes_in,
-                                             spec.bytes_out,
-                                             spec.b_shared)])[0]
+                r = matmul_perf_batch(dev, [spec.shape])[0]
             self.stats.candidates_searched += r.candidates_searched
             return ops.OpResult("matmul", r.latency
                                 + dev.kernel_launch_overhead_s, r.flops,
@@ -165,9 +164,7 @@ class Evaluator:
         if not pending:
             return seen
         dev = self.device
-        shapes = [(s.m, s.k, s.n, s.batch, s.bytes_in, s.bytes_out, s.b_shared)
-                  for s in pending]
-        results = matmul_perf_batch(dev, shapes)
+        results = matmul_perf_batch(dev, [s.shape for s in pending])
         self.stats.batched_searches += 1
         for s, r in zip(pending, results):
             self.stats.matmul_searches += 1

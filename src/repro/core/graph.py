@@ -25,6 +25,7 @@ from .hardware import System
 from . import operators as ops
 from .ir import (CollectiveSpec, ElementwiseSpec, Graph, GraphBuilder,
                  MatmulSpec, NormSpec, ScanSpec, SoftmaxSpec, TrafficSpec)
+from .precision import DEFAULT, PrecisionPolicy
 
 
 @dataclass(frozen=True)
@@ -77,17 +78,20 @@ class LayerCost:
 # symbolic builders
 # ---------------------------------------------------------------------------
 
-def _norm_spec(cfg: ModelConfig, rows: int) -> NormSpec:
+def _norm_spec(cfg: ModelConfig, rows: int,
+               policy: PrecisionPolicy = DEFAULT) -> NormSpec:
     kind = "layernorm" if cfg.norm == "layernorm" else "rmsnorm"
-    return NormSpec(kind, rows, cfg.d_model)
+    ab = policy.activations.bytes
+    return NormSpec(kind, rows, cfg.d_model, bytes_in=ab, bytes_out=ab)
 
 
 def _add_tp_collective(g: GraphBuilder, cfg: ModelConfig, plan: Plan,
-                       tokens: int, name: str) -> None:
+                       tokens: int, name: str,
+                       policy: PrecisionPolicy = DEFAULT) -> None:
     """Per-layer activation synchronization under tensor parallelism."""
     if plan.tp <= 1:
         return
-    bytes_ = tokens * cfg.d_model * 2
+    bytes_ = tokens * cfg.d_model * policy.activations.bytes
     if plan.sequence_parallel:
         g.add(CollectiveSpec("reduce_scatter", bytes_, plan.tp), name + "_rs")
         g.add(CollectiveSpec("all_gather", bytes_, plan.tp), name + "_ag")
@@ -96,9 +100,13 @@ def _add_tp_collective(g: GraphBuilder, cfg: ModelConfig, plan: Plan,
 
 
 def build_attention(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
-                    kv_len: int, cross_len: int = 0,
-                    prefix: str = "") -> Graph:
-    """Self- (or cross-) attention block. seq = query length (1 for decode)."""
+                    kv_len: int, cross_len: int = 0, prefix: str = "",
+                    policy: PrecisionPolicy = DEFAULT) -> Graph:
+    """Self- (or cross-) attention block. seq = query length (1 for decode).
+
+    Precision: the projections are activation x weight GEMMs; the score and
+    value GEMMs stream their B operand from the (possibly quantized) KV
+    cache, as does the one-token KV append at decode."""
     d, dh = cfg.d_model, cfg.d_head
     hq = max(1, cfg.n_heads // plan.tp)
     hkv = max(1, cfg.n_kv_heads // plan.tp)
@@ -107,136 +115,161 @@ def build_attention(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
     ctx = cross_len if cross_len else kv_len
     win = cfg.attn_window
     kv_eff = min(ctx, win) if (win and not cross_len) else ctx
+    ab = policy.activations.bytes
+    w_mm, kv_mm = policy.weight_gemm(), policy.attn_gemm()
 
     g = GraphBuilder()
-    g.add(_norm_spec(cfg, toks), prefix + "ln_attn")
-    g.add(MatmulSpec(toks, d, (hq + 2 * hkv) * dh), prefix + "qkv_proj")
+    g.add(_norm_spec(cfg, toks, policy), prefix + "ln_attn")
+    g.add(MatmulSpec(toks, d, (hq + 2 * hkv) * dh, **w_mm),
+          prefix + "qkv_proj")
     if cfg.qk_norm:
-        g.add(NormSpec("rmsnorm", toks * (hq + hkv), dh), prefix + "qk_norm")
+        g.add(NormSpec("rmsnorm", toks * (hq + hkv), dh, bytes_in=ab,
+                       bytes_out=ab), prefix + "qk_norm")
     if cfg.rope_fraction > 0:
-        g.add(ElementwiseSpec("generic", toks * (hq + hkv) * dh, 6.0),
-              prefix + "rope")
-    if seq == 1:   # decode: append one token of KV
-        g.add(TrafficSpec(batch * 2 * hkv * dh * 2), prefix + "kv_append")
-    g.add(MatmulSpec(g_ * seq, dh, kv_eff, batch=batch * hkv),
+        g.add(ElementwiseSpec("generic", toks * (hq + hkv) * dh, 6.0,
+                              bytes_elt=ab), prefix + "rope")
+    if seq == 1:   # decode: append one token of KV at cache precision
+        g.add(TrafficSpec(batch * 2 * hkv * dh * policy.kv_cache.bytes),
+              prefix + "kv_append")
+    g.add(MatmulSpec(g_ * seq, dh, kv_eff, batch=batch * hkv, **kv_mm),
           prefix + "qk_t")
-    g.add(SoftmaxSpec(batch * hq * seq, kv_eff), prefix + "softmax")
-    g.add(MatmulSpec(g_ * seq, kv_eff, dh, batch=batch * hkv),
+    g.add(SoftmaxSpec(batch * hq * seq, kv_eff, bytes_in=ab, bytes_out=ab),
+          prefix + "softmax")
+    g.add(MatmulSpec(g_ * seq, kv_eff, dh, batch=batch * hkv, **kv_mm),
           prefix + "a_mul_v")
-    g.add(MatmulSpec(toks, hq * dh, d), prefix + "o_proj")
-    _add_tp_collective(g, cfg, plan, toks, prefix + "allreduce_attn")
+    g.add(MatmulSpec(toks, hq * dh, d, **w_mm), prefix + "o_proj")
+    _add_tp_collective(g, cfg, plan, toks, prefix + "allreduce_attn", policy)
     return g.build()
 
 
-def build_mlp(cfg: ModelConfig, plan: Plan, batch: int, seq: int) -> Graph:
+def build_mlp(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
+              policy: PrecisionPolicy = DEFAULT) -> Graph:
     d = cfg.d_model
     toks = batch * seq
+    ab = policy.activations.bytes
+    w_mm = policy.weight_gemm()
     g = GraphBuilder()
-    g.add(_norm_spec(cfg, toks), "ln_mlp")
+    g.add(_norm_spec(cfg, toks, policy), "ln_mlp")
 
     if cfg.n_experts:
         e_local = max(1, cfg.n_experts // plan.ep)
-        g.add(MatmulSpec(toks, d, cfg.n_experts), "router")
+        g.add(MatmulSpec(toks, d, cfg.n_experts, **w_mm), "router")
         if plan.ep > 1:
-            a2a = toks * cfg.top_k * d * 2
+            a2a = toks * cfg.top_k * d * ab
             g.add(CollectiveSpec("all_to_all", a2a, plan.ep), "moe_dispatch")
         toks_e = math.ceil(toks * cfg.top_k / cfg.n_experts)
         ff = max(1, cfg.d_ff // plan.tp)
         n_up = 2 * ff if cfg.mlp_gated else ff
-        g.add(MatmulSpec(toks_e, d, n_up, batch=e_local), "expert_up")
+        g.add(MatmulSpec(toks_e, d, n_up, batch=e_local, **w_mm), "expert_up")
         act = "silu_mul" if cfg.mlp_gated else "gelu"
-        g.add(ElementwiseSpec(act, toks_e * e_local * ff), "expert_act")
-        g.add(MatmulSpec(toks_e, ff, d, batch=e_local), "expert_down")
+        g.add(ElementwiseSpec(act, toks_e * e_local * ff, bytes_elt=ab),
+              "expert_act")
+        g.add(MatmulSpec(toks_e, ff, d, batch=e_local, **w_mm), "expert_down")
         if plan.ep > 1:
-            g.add(CollectiveSpec("all_to_all", toks * cfg.top_k * d * 2,
+            g.add(CollectiveSpec("all_to_all", toks * cfg.top_k * d * ab,
                                  plan.ep), "moe_combine")
-        g.add(ElementwiseSpec("generic", toks * d, 2 * cfg.top_k), "moe_mix")
+        g.add(ElementwiseSpec("generic", toks * d, 2 * cfg.top_k,
+                              bytes_elt=ab), "moe_mix")
     else:
         ff = max(1, cfg.d_ff // plan.tp)
         if cfg.mlp_gated:
-            g.add(MatmulSpec(toks, d, 2 * ff), "w1_gate_proj")
-            g.add(ElementwiseSpec("silu_mul", toks * ff), "act_mul")
+            g.add(MatmulSpec(toks, d, 2 * ff, **w_mm), "w1_gate_proj")
+            g.add(ElementwiseSpec("silu_mul", toks * ff, bytes_elt=ab),
+                  "act_mul")
         else:
-            g.add(MatmulSpec(toks, d, ff), "w1_proj")
-            g.add(ElementwiseSpec("gelu", toks * ff), "gelu")
-        g.add(MatmulSpec(toks, ff, d), "w2_proj")
-    _add_tp_collective(g, cfg, plan, toks, "allreduce_mlp")
+            g.add(MatmulSpec(toks, d, ff, **w_mm), "w1_proj")
+            g.add(ElementwiseSpec("gelu", toks * ff, bytes_elt=ab), "gelu")
+        g.add(MatmulSpec(toks, ff, d, **w_mm), "w2_proj")
+    _add_tp_collective(g, cfg, plan, toks, "allreduce_mlp", policy)
     return g.build()
 
 
-def build_rwkv(cfg: ModelConfig, plan: Plan, batch: int, seq: int) -> Graph:
+def build_rwkv(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
+               policy: PrecisionPolicy = DEFAULT) -> Graph:
     """RWKV6 time-mix + channel-mix (extension op: ScanSpec)."""
     d = cfg.d_model
     d_tp = max(1, d // plan.tp)
     dh = cfg.rwkv_head_dim
     toks = batch * seq
+    ab = policy.activations.bytes
+    w_mm = policy.weight_gemm()
     g = GraphBuilder()
-    g.add(NormSpec("layernorm", toks, d), "ln_tmix")
+    g.add(NormSpec("layernorm", toks, d, bytes_in=ab, bytes_out=ab),
+          "ln_tmix")
     for nm in ("r", "k", "v", "g", "w_lora"):
         n = d_tp if nm != "w_lora" else 64
-        g.add(MatmulSpec(toks, d, n), f"tmix_{nm}")
+        g.add(MatmulSpec(toks, d, n, **w_mm), f"tmix_{nm}")
     g.add(ScanSpec(seq, batch, d_state=d_tp * dh,
                    flops_per_step=6.0 * d_tp * dh,
-                   bytes_io=6 * toks * d_tp * 2), "wkv_scan")
-    g.add(MatmulSpec(toks, d_tp, d), "tmix_out")
+                   bytes_io=6 * toks * d_tp * ab), "wkv_scan")
+    g.add(MatmulSpec(toks, d_tp, d, **w_mm), "tmix_out")
     if plan.tp > 1:
-        g.add(CollectiveSpec("all_reduce", toks * d * 2, plan.tp),
+        g.add(CollectiveSpec("all_reduce", toks * d * ab, plan.tp),
               "allreduce_tmix")
     # channel mix
     ff = int(3.5 * d) // plan.tp
-    g.add(NormSpec("layernorm", toks, d), "ln_cmix")
-    g.add(MatmulSpec(toks, d, ff), "cmix_up")
-    g.add(ElementwiseSpec("generic", toks * ff, 3.0), "relu_sq")
-    g.add(MatmulSpec(toks, ff, d), "cmix_down")
+    g.add(NormSpec("layernorm", toks, d, bytes_in=ab, bytes_out=ab),
+          "ln_cmix")
+    g.add(MatmulSpec(toks, d, ff, **w_mm), "cmix_up")
+    g.add(ElementwiseSpec("generic", toks * ff, 3.0, bytes_elt=ab), "relu_sq")
+    g.add(MatmulSpec(toks, ff, d, **w_mm), "cmix_down")
     if plan.tp > 1:
-        g.add(CollectiveSpec("all_reduce", toks * d * 2, plan.tp),
+        g.add(CollectiveSpec("all_reduce", toks * d * ab, plan.tp),
               "allreduce_cmix")
     return g.build()
 
 
-def build_rglru(cfg: ModelConfig, plan: Plan, batch: int, seq: int) -> Graph:
+def build_rglru(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
+                policy: PrecisionPolicy = DEFAULT) -> Graph:
     """Griffin recurrent block: dual in-proj, short conv, RG-LRU scan."""
     d = cfg.d_model
     d_tp = max(1, d // plan.tp)
     toks = batch * seq
+    ab = policy.activations.bytes
+    w_mm = policy.weight_gemm()
     g = GraphBuilder()
-    g.add(_norm_spec(cfg, toks), "ln_rec")
-    g.add(MatmulSpec(toks, d, 2 * d_tp), "rec_in_proj")
+    g.add(_norm_spec(cfg, toks, policy), "ln_rec")
+    g.add(MatmulSpec(toks, d, 2 * d_tp, **w_mm), "rec_in_proj")
     g.add(ElementwiseSpec("generic", toks * d_tp,
-                          2.0 * cfg.rglru_conv_width), "conv1d")
+                          2.0 * cfg.rglru_conv_width, bytes_elt=ab), "conv1d")
     g.add(ScanSpec(seq, batch, d_state=d_tp, flops_per_step=12.0 * d_tp,
-                   bytes_io=4 * toks * d_tp * 2), "rg_lru")
-    g.add(ElementwiseSpec("generic", toks * d_tp, 4.0), "gate_mul")
-    g.add(MatmulSpec(toks, d_tp, d), "rec_out_proj")
-    _add_tp_collective(g, cfg, plan, toks, "allreduce_rec")
+                   bytes_io=4 * toks * d_tp * ab), "rg_lru")
+    g.add(ElementwiseSpec("generic", toks * d_tp, 4.0, bytes_elt=ab),
+          "gate_mul")
+    g.add(MatmulSpec(toks, d_tp, d, **w_mm), "rec_out_proj")
+    _add_tp_collective(g, cfg, plan, toks, "allreduce_rec", policy)
     return g.build()
 
 
 def build_layer(cfg: ModelConfig, plan: Plan, layer: int, batch: int,
-                seq: int, kv_len: int) -> Graph:
+                seq: int, kv_len: int,
+                policy: PrecisionPolicy = DEFAULT) -> Graph:
     kind = cfg.block_kind(layer)
     if kind == "rwkv":
-        return build_rwkv(cfg, plan, batch, seq)
+        return build_rwkv(cfg, plan, batch, seq, policy)
     if kind == "rglru":
-        return build_rglru(cfg, plan, batch, seq) \
-            + build_mlp(cfg, plan, batch, seq)
-    g = build_attention(cfg, plan, batch, seq, kv_len)
+        return build_rglru(cfg, plan, batch, seq, policy) \
+            + build_mlp(cfg, plan, batch, seq, policy)
+    g = build_attention(cfg, plan, batch, seq, kv_len, policy=policy)
     if cfg.cross_attention or layer in cfg.cross_attn_layers:
         g = g + build_attention(cfg, plan, batch, seq, kv_len,
                                 cross_len=max(cfg.n_frontend_tokens, 1),
-                                prefix="x_")
-    return g + build_mlp(cfg, plan, batch, seq)
+                                prefix="x_", policy=policy)
+    return g + build_mlp(cfg, plan, batch, seq, policy)
 
 
 @functools.lru_cache(maxsize=4096)
 def build_model(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
-                kv_len: int, include_head: bool = True) -> Graph:
+                kv_len: int, include_head: bool = True,
+                policy: PrecisionPolicy = DEFAULT) -> Graph:
     """Whole-model graph: distinct layer kinds built once with repeat counts.
 
     Layers of the same kind have identical cost — each kind becomes one set
     of nodes x `repeat` (this is what makes simulating GPT-3's 96 layers as
     cheap as one layer). The build is symbolic and cached: no operator model
-    runs until an Evaluator sees the graph.
+    runs until an Evaluator sees the graph. `policy` stamps per-operand byte
+    widths + compute rates on every spec (DESIGN.md §8); the default
+    reproduces the implicit-fp16 seed graph exactly.
     """
     kinds: dict = {}
     for i in range(cfg.n_layers):
@@ -249,22 +282,26 @@ def build_model(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
         key = (cfg.block_kind(i),
                cfg.cross_attention or i in cfg.cross_attn_layers)
         if key not in rep_layer:
-            rep_layer[key] = build_layer(cfg, plan, i, batch, seq, kv_len)
+            rep_layer[key] = build_layer(cfg, plan, i, batch, seq, kv_len,
+                                         policy)
     g = GraphBuilder()
     for key, cnt in layers_per_stage.items():
         g.extend(rep_layer[key].scaled(cnt))
     # encoder stack (whisper): runs once per request at prefill
     if cfg.n_encoder_layers and seq > 1:
         enc_len = max(cfg.n_frontend_tokens, 1)
-        enc = build_attention(cfg, plan, batch, enc_len, enc_len) \
-            + build_mlp(cfg, plan, batch, enc_len)
+        enc = build_attention(cfg, plan, batch, enc_len, enc_len,
+                              policy=policy) \
+            + build_mlp(cfg, plan, batch, enc_len, policy)
         g.extend(enc.scaled(cfg.n_encoder_layers, prefix="enc_"))
     if include_head:
         toks = batch * (seq if seq > 1 else 1)
-        g.add(TrafficSpec(toks * cfg.d_model * 2), "embed")
-        g.add(_norm_spec(cfg, toks), "ln_final")
+        # embedding gather reads weight-precision rows
+        g.add(TrafficSpec(toks * cfg.d_model * policy.weights.bytes), "embed")
+        g.add(_norm_spec(cfg, toks, policy), "ln_final")
         g.add(MatmulSpec(toks, cfg.d_model,
-                         max(1, cfg.vocab_size // plan.tp)), "lm_head")
+                         max(1, cfg.vocab_size // plan.tp),
+                         **policy.weight_gemm()), "lm_head")
     return g.build()
 
 
@@ -273,18 +310,19 @@ def build_model(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
 # ---------------------------------------------------------------------------
 
 def layer_ops(cfg: ModelConfig, system: System, plan: Plan, layer: int,
-              batch: int, seq: int, kv_len: int,
-              evaluator=None) -> LayerCost:
+              batch: int, seq: int, kv_len: int, evaluator=None,
+              policy: PrecisionPolicy = DEFAULT) -> LayerCost:
     from .evaluator import Evaluator
     ev = evaluator if evaluator is not None else Evaluator(system)
-    return ev.evaluate(build_layer(cfg, plan, layer, batch, seq, kv_len))
+    return ev.evaluate(build_layer(cfg, plan, layer, batch, seq, kv_len,
+                                   policy))
 
 
 def model_ops(cfg: ModelConfig, system: System, plan: Plan, batch: int,
               seq: int, kv_len: int, include_head: bool = True,
-              evaluator=None) -> LayerCost:
+              evaluator=None, policy: PrecisionPolicy = DEFAULT) -> LayerCost:
     """Whole-model cost: build the symbolic graph and evaluate it."""
     from .evaluator import Evaluator
     ev = evaluator if evaluator is not None else Evaluator(system)
     return ev.evaluate(build_model(cfg, plan, batch, seq, kv_len,
-                                   include_head))
+                                   include_head, policy))

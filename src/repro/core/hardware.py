@@ -24,6 +24,10 @@ GB = 1024 * MB
 class SystolicArray:
     rows: int
     cols: int
+    # native PE datapath — prices die area (area.MAC_AREA) per dtype; the
+    # timing model's narrow-datatype rate comes from the PrecisionPolicy
+    # (precision.mac_scale), which is defined relative to this fp16 baseline
+    dtype: str = "fp16"
 
     @property
     def macs(self) -> int:
@@ -169,6 +173,20 @@ def make_core(lanes: int, vec_width: int, sa_rows: int,
 
 def _gpu_core(lanes: int, vec_width: int, sa: int, local_kb: int) -> Core:
     return make_core(lanes, vec_width, sa, local_kb=local_kb)
+
+
+def with_mac_dtype(device: Device, dtype: str) -> Device:
+    """Variant of `device` whose systolic PEs are built natively for `dtype`
+    (same array geometry; smaller multipliers -> smaller die, area.MAC_AREA).
+    Pair with the matching PrecisionPolicy when evaluating performance — the
+    timing model does not stop you from running fp16 math on an int8 array.
+    """
+    lane = device.core.lane
+    sa = replace(lane.systolic_array, dtype=dtype)
+    return replace(
+        device,
+        name=f"{device.name}-{dtype}mac",
+        core=replace(device.core, lane=replace(lane, systolic_array=sa)))
 
 
 def nvidia_a100() -> Device:

@@ -22,6 +22,7 @@ from ..configs.base import ModelConfig
 from .evaluator import Evaluator
 from .hardware import System
 from .graph import LayerCost, Plan, build_model
+from .precision import DEFAULT, PrecisionPolicy
 from . import interconnect as net
 
 
@@ -56,38 +57,45 @@ def _evaluator(system: System, evaluator: Optional[Evaluator]) -> Evaluator:
     return evaluator
 
 
-def pp_fill(system: System, plan: Plan, tokens: int, d_model: int) -> float:
+def pp_fill(system: System, plan: Plan, tokens: int, d_model: int,
+            policy: PrecisionPolicy = DEFAULT) -> float:
     """Pipeline fill: (pp-1) p2p activation hand-offs for the first batch.
 
     Public (ISSUE 3): the serving simulator prices its prefill waves and
-    decode rounds with the same fill term generate() uses.
+    decode rounds with the same fill term generate() uses. Hand-offs move
+    activations, so the policy's activation width prices them.
     """
     if plan.pp <= 1:
         return 0.0
-    return net.p2p(system, tokens * d_model * 2).latency * (plan.pp - 1)
+    return net.p2p(system, tokens * d_model
+                   * policy.activations.bytes).latency * (plan.pp - 1)
 
 
 def prefill(system: System, cfg: ModelConfig, plan: Plan, batch: int,
-            seq: int, evaluator: Optional[Evaluator] = None) -> PerfReport:
+            seq: int, evaluator: Optional[Evaluator] = None,
+            policy: PrecisionPolicy = DEFAULT) -> PerfReport:
     ev = _evaluator(system, evaluator)
-    cost = ev.evaluate(build_model(cfg, plan, batch, seq, kv_len=seq))
+    cost = ev.evaluate(build_model(cfg, plan, batch, seq, kv_len=seq,
+                                   policy=policy))
     rep = _report(cost)
-    rep.latency += pp_fill(system, plan, batch * seq, cfg.d_model)
+    rep.latency += pp_fill(system, plan, batch * seq, cfg.d_model, policy)
     return rep
 
 
 def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
-                kv_len: int,
-                evaluator: Optional[Evaluator] = None) -> PerfReport:
+                kv_len: int, evaluator: Optional[Evaluator] = None,
+                policy: PrecisionPolicy = DEFAULT) -> PerfReport:
     ev = _evaluator(system, evaluator)
-    cost = ev.evaluate(build_model(cfg, plan, batch, seq=1, kv_len=kv_len))
+    cost = ev.evaluate(build_model(cfg, plan, batch, seq=1, kv_len=kv_len,
+                                   policy=policy))
     rep = _report(cost)
-    rep.latency += pp_fill(system, plan, batch, cfg.d_model)
+    rep.latency += pp_fill(system, plan, batch, cfg.d_model, policy)
     return rep
 
 
 def generate_graphs(cfg: ModelConfig, plan: Plan, batch: int, in_len: int,
-                    out_len: int, samples: int = 8):
+                    out_len: int, samples: int = 8,
+                    policy: PrecisionPolicy = DEFAULT):
     """The exact symbolic graphs `generate` evaluates: the prefill graph plus
     one decode graph per KV trapezoid sample point. Exposed so study.Study
     can pre-collect every GEMM shape of a whole grid into one device-axis
@@ -95,14 +103,17 @@ def generate_graphs(cfg: ModelConfig, plan: Plan, batch: int, in_len: int,
     where pts are the sampled KV lengths (graphs[1:] align with pts)."""
     pts = [in_len + round(i * (out_len - 1) / max(samples - 1, 1))
            for i in range(samples)]
-    graphs = [build_model(cfg, plan, batch, in_len, kv_len=in_len)] + \
-        [build_model(cfg, plan, batch, seq=1, kv_len=kv) for kv in pts]
+    graphs = [build_model(cfg, plan, batch, in_len, kv_len=in_len,
+                          policy=policy)] + \
+        [build_model(cfg, plan, batch, seq=1, kv_len=kv, policy=policy)
+         for kv in pts]
     return graphs, pts
 
 
 def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
              in_len: int, out_len: int, samples: int = 8,
-             evaluator: Optional[Evaluator] = None) -> PerfReport:
+             evaluator: Optional[Evaluator] = None,
+             policy: PrecisionPolicy = DEFAULT) -> PerfReport:
     """prefill + out_len decode steps; decode latency integrated over the
     growing KV with `samples` trapezoid points (exact enough, hugely faster).
 
@@ -110,13 +121,14 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     batched call: their unique GEMM shapes share a single mapper search.
     """
     ev = _evaluator(system, evaluator)
-    graphs, pts = generate_graphs(cfg, plan, batch, in_len, out_len, samples)
+    graphs, pts = generate_graphs(cfg, plan, batch, in_len, out_len, samples,
+                                  policy)
     costs = ev.evaluate_many(graphs)
 
     pf = _report(costs[0])
-    pf_fill = pp_fill(system, plan, batch * in_len, cfg.d_model)
+    pf_fill = pp_fill(system, plan, batch * in_len, cfg.d_model, policy)
     pf.latency += pf_fill
-    dec_fill = pp_fill(system, plan, batch, cfg.d_model)
+    dec_fill = pp_fill(system, plan, batch, cfg.d_model, policy)
     lats = [c.latency + dec_fill for c in costs[1:]]
 
     total = pf.latency
@@ -162,7 +174,18 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
 # ------------------------- memory accounting ------------------------------
 
 def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
-                      max_len: int, bytes_per: int = 2) -> float:
+                      max_len: int,
+                      policy: PrecisionPolicy = DEFAULT) -> float:
+    """Resident bytes per device under the planner memory model.
+
+    The precision policy is the single source of truth for byte widths
+    (ISSUE 4): weights at `policy.weights`, the KV cache at
+    `policy.kv_cache` (this is the quantized-KV capacity lever: int8 KV
+    doubles the slot budget), activations at `policy.activations`.
+    Recurrent state stays fp32, matching the kernels.
+    """
+    wb = policy.weights.bytes
+    kvb = policy.kv_cache.bytes
     param_n = cfg.param_count()
     if cfg.n_experts and plan.ep > 1:
         # expert FFN weights are sharded ep-ways: each device in the expert
@@ -170,13 +193,13 @@ def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
         # only 1/ep of the expert weight bytes are resident per device
         expert_n = cfg.n_layers * cfg.n_experts * cfg.mlp_params()
         param_n = param_n - expert_n * (plan.ep - 1) / plan.ep
-    params = param_n * bytes_per / (plan.tp * plan.pp)
-    kv = batch * max_len * cfg.kv_bytes_per_token(bytes_per) / (plan.tp * plan.pp)
+    params = param_n * wb / (plan.tp * plan.pp)
+    kv = batch * max_len * cfg.kv_bytes_per_token(kvb) / (plan.tp * plan.pp)
     if cfg.attn_window:   # local attention caps the resident KV window
         n_attn = sum(1 for i in range(cfg.n_layers)
                      if cfg.block_kind(i) == "attn")
         if n_attn:
-            per_layer = cfg.kv_bytes_per_token(bytes_per) / n_attn
+            per_layer = cfg.kv_bytes_per_token(kvb) / n_attn
             kv = batch * min(max_len, cfg.attn_window) * per_layer * n_attn \
                 / (plan.tp * plan.pp)
     # recurrent state (rwkv/rglru)
@@ -189,17 +212,19 @@ def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
             state += batch * cfg.d_model * 4
     state /= (plan.tp * plan.pp)
     act = batch * max(1, max_len if max_len < 8192 else 8192) \
-        * cfg.d_model * bytes_per * 4 / plan.tp
+        * cfg.d_model * policy.activations.bytes * 4 / plan.tp
     return params + kv + state + act
 
 
 def max_batch(system: System, cfg: ModelConfig, plan: Plan,
-              max_len: int) -> int:
+              max_len: int, policy: PrecisionPolicy = DEFAULT) -> int:
+    """Largest batch (or serving slot count) that fits device memory —
+    quantized-KV policies raise this budget."""
     cap = system.device.memory_capacity
     lo, hi = 0, 1 << 20
     while lo < hi:
         mid = (lo + hi + 1) // 2
-        if memory_per_device(cfg, plan, mid, max_len) <= cap:
+        if memory_per_device(cfg, plan, mid, max_len, policy) <= cap:
             lo = mid
         else:
             hi = mid - 1
@@ -208,11 +233,12 @@ def max_batch(system: System, cfg: ModelConfig, plan: Plan,
 
 def throughput(system: System, cfg: ModelConfig, plan: Plan, batch: int,
                in_len: int, out_len: int,
-               evaluator: Optional[Evaluator] = None) -> float:
+               evaluator: Optional[Evaluator] = None,
+               policy: PrecisionPolicy = DEFAULT) -> float:
     """Output tokens / second for the whole system (pipeline-full steady
     state: pp stages each process different microbatches concurrently)."""
     g = generate(system, cfg, plan, batch, in_len, out_len,
-                 evaluator=evaluator)
+                 evaluator=evaluator, policy=policy)
     return throughput_from_generate(g, plan, batch, out_len)
 
 

@@ -28,14 +28,30 @@ class MatmulSpec:
 
     Evaluated through the mapper's tiling/scheduling search (mapper.py);
     unique shapes across a whole sweep are solved in one batched search.
+
+    Per-operand byte widths (ISSUE 4): A (activations), B (weights or KV
+    cache), C (output activations), and the accumulator width the partials
+    are staged at in on-chip buffers. `mac_scale` is the systolic issue rate
+    relative to the fp16 datapath (precision.mac_scale; power of two).
+    Widths may be fractional for sub-byte types (int4 -> 0.5).
     """
     m: int
     k: int
     n: int
     batch: int = 1
-    bytes_in: int = 2
-    bytes_out: int = 2
+    bytes_a: Union[int, float] = 2
+    bytes_b: Union[int, float] = 2
+    bytes_out: Union[int, float] = 2
+    bytes_acc: Union[int, float] = 2
     b_shared: bool = False
+    mac_scale: float = 1.0
+
+    @property
+    def shape(self) -> tuple:
+        """The mapper's MatmulShape tuple for this spec."""
+        return (self.m, self.k, self.n, self.batch, self.bytes_a,
+                self.bytes_b, self.bytes_out, self.bytes_acc, self.b_shared,
+                self.mac_scale)
 
 
 @dataclass(frozen=True)
@@ -43,8 +59,8 @@ class SoftmaxSpec:
     """Row-wise online softmax over (rows, cols)."""
     rows: int
     cols: int
-    bytes_in: int = 2
-    bytes_out: int = 2
+    bytes_in: Union[int, float] = 2
+    bytes_out: Union[int, float] = 2
 
 
 @dataclass(frozen=True)
@@ -53,8 +69,8 @@ class NormSpec:
     kind: str                       # "layernorm" | "rmsnorm"
     rows: int
     cols: int
-    bytes_in: int = 2
-    bytes_out: int = 2
+    bytes_in: Union[int, float] = 2
+    bytes_out: Union[int, float] = 2
 
 
 @dataclass(frozen=True)
@@ -66,7 +82,7 @@ class ElementwiseSpec:
     n_elements: int
     flops_per_elt: float = 1.0
     n_in: int = 1
-    bytes_elt: int = 2
+    bytes_elt: Union[int, float] = 2
 
 
 @dataclass(frozen=True)

@@ -70,9 +70,17 @@ class MatmulResult:
     candidates_searched: int
 
 
-# GEMM shape tuple accepted by matmul_perf_batch:
-#   (m, k, n, batch, bytes_in, bytes_out, b_shared)
-MatmulShape = Tuple[int, int, int, int, int, int, bool]
+# GEMM shape tuple accepted by matmul_perf_batch (ISSUE 4: per-operand byte
+# widths + narrow-datatype compute rate):
+#   (m, k, n, batch, bytes_a, bytes_b, bytes_out, bytes_acc, b_shared,
+#    mac_scale)
+# bytes_a prices the A (activation) stream, bytes_b the B (weight / KV)
+# stream, bytes_out the written C, bytes_acc the on-chip staging of C tiles
+# and k-split partials. mac_scale divides systolic cycle counts (power of
+# two: exact). All-2 widths with mac_scale 1.0 reproduce the seed search
+# bit-for-bit.
+MatmulShape = Tuple[int, int, int, int, float, float, float, float, bool,
+                    float]
 
 
 def _tile_candidates(dim: int, align: int, max_tiles: int = 12) -> np.ndarray:
@@ -99,7 +107,7 @@ def _candidate_rows(dev: Device, shape: MatmulShape):
     """Feasible (tile, subtile) pairs for one GEMM shape, in dense-search
     order (level-2 index major, level-1 minor). Returns the gathered flat
     candidate arrays plus per-pipeline validity columns."""
-    m, k, n, batch, bytes_in, bytes_out, _ = shape
+    m, k, n, batch, bytes_a, bytes_b, bytes_out, bytes_acc, _, _ = shape
     sa = dev.core.lane.systolic_array
 
     tm = _tile_candidates(m, min(sa.rows, m))
@@ -114,8 +122,10 @@ def _candidate_rows(dev: Device, shape: MatmulShape):
     SM, SK, SN = np.meshgrid(sm, sk, sn, indexing="ij")
     SM, SK, SN = SM.ravel(), SK.ravel(), SN.ravel()
 
-    gb_need = (TM * TK + TK * TN + TM * TN) * bytes_in
-    lb_need = (SM * SK + SK * SN + SM * SN) * bytes_in
+    # buffer residency: A/B tiles at their stream widths, C tiles at the
+    # accumulator width they are staged at
+    gb_need = TM * TK * bytes_a + TK * TN * bytes_b + TM * TN * bytes_acc
+    lb_need = SM * SK * bytes_a + SK * SN * bytes_b + SM * SN * bytes_acc
     gb_ok = (gb_need[:, None] * (1 + np.array([0, 1], dtype=np.int64))
              <= dev.global_buffer_bytes)            # [i2, db2]
     lb_ok = (lb_need[:, None] * (1 + np.array([0, 1], dtype=np.int64))
@@ -166,18 +176,26 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
         np.concatenate([r[j] for r in rows]) for j in range(6))
     P_OK = np.concatenate(p_oks, axis=0) if p_oks else np.zeros((0, 4), bool)
 
-    # per-row gathered shape scalars
+    # per-row gathered shape scalars (byte widths promote to float64 only
+    # when a sub-byte width appears, keeping the default path on exact int64)
     def scal(idx, dtype=np.int64):
-        return np.concatenate([np.full(c, s[idx], dtype=dtype)
-                               for c, s in zip(counts, shapes)])
+        vals = [s[idx] for s in shapes]
+        if dtype is np.int64 and any(v != int(v) for v in vals):
+            dtype = np.float64
+        return np.concatenate([np.full(c, v, dtype=dtype)
+                               for c, v in zip(counts, vals)])
     m_v, k_v, n_v = scal(0), scal(1), scal(2)
     batch_v = scal(3)
-    bytes_in_v, bytes_out_v = scal(4), scal(5)
-    bshared_v = scal(6, dtype=bool)
+    bytes_a_v, bytes_b_v = scal(4), scal(5)
+    bytes_out_v, bytes_acc_v = scal(6), scal(7)
+    bshared_v = scal(8, dtype=bool)
+    mac_scale_v = scal(9, dtype=np.float64)
 
     # ---------------- level 0: core compute time for one subtile ----------
     sn_lane = -(-SN_ // lanes)           # ceil: subtile split across lanes
     subtile_cyc = gemm_cycles_array(SM_, SK_, sn_lane, sa_rows, sa_cols)
+    # narrow-datatype issue rate (power-of-two scale: division is exact)
+    subtile_cyc = np.ceil(subtile_cyc / mac_scale_v).astype(np.int64)
 
     # ---------------- level 1: schedule subtiles across cores -------------
     n_sub_m = -(-TM_ // SM_)
@@ -191,7 +209,7 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
     gm = np.minimum(n_sub_m,
                     np.maximum(1, np.round(np.sqrt(w))).astype(np.int64))
     gn = np.minimum(n_sub_n, np.maximum(1, -(-w // gm)))
-    wave_traffic = (gm * SM_ * TK_ + gn * TK_ * SN_) * bytes_in_v \
+    wave_traffic = gm * SM_ * TK_ * bytes_a_v + gn * TK_ * SN_ * bytes_b_v \
         + gm * gn * SM_ * SN_ * bytes_out_v
     wave_mem_cyc = -(-wave_traffic // gb_bw_cyc)
     wave_cmp_cyc = n_sub_k * subtile_cyc
@@ -204,11 +222,11 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
                                   n_sub_k))
     k_per_core = -(-n_sub_k // ck)
     s2_cmp_cyc = k_per_core * subtile_cyc
-    red_traffic = (2 * (ck - 1)) * SM_ * SN_ * bytes_out_v
+    red_traffic = (2 * (ck - 1)) * SM_ * SN_ * bytes_acc_v
     red_cyc = -(-red_traffic // gb_bw_cyc) + \
         -(-((ck - 1) * SM_ * SN_) // np.maximum(vec_tp * cores, 1))
     s2_waves = -(-(out_subtiles * ck) // cores)
-    s2_traffic = (SM_ * TK_ + TK_ * SN_) * bytes_in_v
+    s2_traffic = SM_ * TK_ * bytes_a_v + TK_ * SN_ * bytes_b_v
     s2_mem_cyc = -(-(s2_traffic * out_subtiles
                      // np.maximum(s2_waves, 1)) // gb_bw_cyc)
     s2_db0 = s2_waves * (s2_mem_cyc + s2_cmp_cyc) + red_cyc
@@ -223,8 +241,8 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
     n_t_n = -(-n_v // np.minimum(TN_, n_v))
     n_t_k = -(-k_v // np.minimum(TK_, k_v))
     steps = batch_v * n_t_m * n_t_n * n_t_k
-    a_bytes_step = TM_ * TK_ * bytes_in_v
-    b_bytes_step = TK_ * TN_ * bytes_in_v
+    a_bytes_step = TM_ * TK_ * bytes_a_v
+    b_bytes_step = TK_ * TN_ * bytes_b_v
     c_bytes_tile = TM_ * TN_ * bytes_out_v
     # B re-read only once per k-sweep regardless of batch when b_shared
     step_mem_t = np.where(bshared_v & (batch_v > 1),
@@ -255,10 +273,10 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
         flat = int(np.argmin(seg))
         row, p = lo + flat // seg.shape[1], flat % seg.shape[1]
         db2, db1 = _DB_OPTIONS[p]
-        m, k, n, batch, bytes_in, bytes_out, _ = shape
+        m, k, n, batch, bytes_a, bytes_b, bytes_out, _, _, _ = shape
         mm_bytes = int(batch * int(n_t_m[row] * n_t_n[row] * n_t_k[row])
-                       * int(TM_[row] * TK_[row] + TK_[row] * TN_[row])
-                       * bytes_in
+                       * (int(TM_[row] * TK_[row]) * bytes_a
+                          + int(TK_[row] * TN_[row]) * bytes_b)
                        + batch * int(n_t_m[row] * n_t_n[row])
                        * int(TM_[row] * TN_[row]) * bytes_out)
         mapping = Mapping(
@@ -361,8 +379,10 @@ def matmul_perf_batch(device: Device,
 
 
 def matmul_perf(device: Device, m: int, k: int, n: int,
-                batch: int = 1, bytes_in: int = 2, bytes_out: int = 2,
-                b_shared: bool = False) -> MatmulResult:
+                batch: int = 1, bytes_a: float = 2, bytes_b: float = 2,
+                bytes_out: float = 2, bytes_acc: float = 2,
+                b_shared: bool = False,
+                mac_scale: float = 1.0) -> MatmulResult:
     """Search the mapping space and return the best predicted latency.
     Memoized through the shared (device, shape) cache in matmul_perf_batch.
 
@@ -371,18 +391,24 @@ def matmul_perf(device: Device, m: int, k: int, n: int,
       batch elements) and multiplies B-operand traffic unless b_shared.
     b_shared: all batch elements share one B operand (weight matmul with the
       activation batch folded into M should instead pass batch=1, m=B*M).
+    bytes_a/bytes_b/bytes_out/bytes_acc, mac_scale: per-operand widths and
+      narrow-datatype issue rate (ISSUE 4) — see MatmulShape.
     """
     return matmul_perf_batch(
-        device, [(m, k, n, batch, bytes_in, bytes_out, b_shared)])[0]
+        device, [(m, k, n, batch, bytes_a, bytes_b, bytes_out, bytes_acc,
+                  b_shared, mac_scale)])[0]
 
 
 def matmul_perf_reference(device: Device, m: int, k: int, n: int,
-                          batch: int = 1, bytes_in: int = 2,
-                          bytes_out: int = 2,
-                          b_shared: bool = False) -> MatmulResult:
-    """The original dense broadcast search, kept verbatim as the equivalence
-    oracle for the compressed/batched engine (tests/test_ir_evaluator.py).
-    Evaluates every candidate including infeasible ones (masked to inf)."""
+                          batch: int = 1, bytes_a: float = 2,
+                          bytes_b: float = 2, bytes_out: float = 2,
+                          bytes_acc: float = 2, b_shared: bool = False,
+                          mac_scale: float = 1.0) -> MatmulResult:
+    """The original dense broadcast search, kept as the equivalence oracle
+    for the compressed/batched engine (tests/test_ir_evaluator.py) — it
+    evolves in lock-step with the engine (per-operand widths + mac_scale in
+    ISSUE 4) but keeps the seed's evaluate-everything structure: every
+    candidate including infeasible ones is priced (masked to inf)."""
     dev = device
     sa = dev.core.lane.systolic_array
     lanes = dev.core.lanes
@@ -413,8 +439,10 @@ def matmul_perf_reference(device: Device, m: int, k: int, n: int,
     DB1 = DB[None, None, :, 1]
 
     # ---------------- validity masks ----------------
-    gb_need = (TM_ * TK_ + TK_ * TN_ + TM_ * TN_) * bytes_in * (1 + DB2)
-    lb_need = (SM_ * SK_ + SK_ * SN_ + SM_ * SN_) * bytes_in * (1 + DB1)
+    gb_need = (TM_ * TK_ * bytes_a + TK_ * TN_ * bytes_b
+               + TM_ * TN_ * bytes_acc) * (1 + DB2)
+    lb_need = (SM_ * SK_ * bytes_a + SK_ * SN_ * bytes_b
+               + SM_ * SN_ * bytes_acc) * (1 + DB1)
     valid = (gb_need <= dev.global_buffer_bytes) \
         & (lb_need <= dev.core.local_buffer_bytes) \
         & (SM_ <= TM_) & (SK_ <= TK_) & (SN_ <= TN_)
@@ -426,6 +454,8 @@ def matmul_perf_reference(device: Device, m: int, k: int, n: int,
     # subtile split across lanes on the N dimension
     sn_lane = -(-SN_ // lanes)           # ceil
     lane_cyc = gemm_cycles_array(SM_, SK_, sn_lane, sa.rows, sa.cols)
+    # narrow-datatype issue rate (power-of-two scale: division is exact)
+    lane_cyc = np.ceil(lane_cyc / mac_scale).astype(np.int64)
     subtile_cyc = lane_cyc               # lanes run in parallel
 
     # ---------------- level 1: schedule subtiles across cores -------------
@@ -442,7 +472,7 @@ def matmul_perf_reference(device: Device, m: int, k: int, n: int,
     gm = np.minimum(n_sub_m,
                     np.maximum(1, np.round(np.sqrt(w))).astype(np.int64))
     gn = np.minimum(n_sub_n, np.maximum(1, -(-w // gm)))
-    wave_traffic = (gm * SM_ * TK_ + gn * TK_ * SN_) * bytes_in \
+    wave_traffic = gm * SM_ * TK_ * bytes_a + gn * TK_ * SN_ * bytes_b \
         + gm * gn * SM_ * SN_ * bytes_out
     wave_mem_cyc = -(-wave_traffic // gb_bw_cyc)
     wave_cmp_cyc = n_sub_k * subtile_cyc
@@ -458,11 +488,11 @@ def matmul_perf_reference(device: Device, m: int, k: int, n: int,
     s2_cmp_cyc = k_per_core * subtile_cyc
     # reduction: partials written + read through GB, summed on vector units
     vec_tp = dev.core.lanes * dev.core.lane.vector_unit.width
-    red_traffic = (2 * (ck - 1)) * SM_ * SN_ * bytes_out
+    red_traffic = (2 * (ck - 1)) * SM_ * SN_ * bytes_acc
     red_cyc = -(-red_traffic // gb_bw_cyc) + \
         -(-((ck - 1) * SM_ * SN_) // np.maximum(vec_tp * cores, 1))
     s2_waves = -(-(out_subtiles * ck) // cores)
-    s2_traffic = (SM_ * TK_ + TK_ * SN_) * bytes_in      # per subtile group
+    s2_traffic = SM_ * TK_ * bytes_a + TK_ * SN_ * bytes_b  # per subtile grp
     s2_mem_cyc = -(-(s2_traffic * out_subtiles
                      // np.maximum(s2_waves, 1)) // gb_bw_cyc)
     s2_cyc = np.where(DB1 == 1,
@@ -479,8 +509,8 @@ def matmul_perf_reference(device: Device, m: int, k: int, n: int,
     n_t_k = -(-k // np.minimum(TK_, k))
     steps = batch * n_t_m * n_t_n * n_t_k
     # IO per step: A tile + B tile; C written once per (m,n) tile
-    a_bytes_step = TM_ * TK_ * bytes_in
-    b_bytes_step = TK_ * TN_ * bytes_in
+    a_bytes_step = TM_ * TK_ * bytes_a
+    b_bytes_step = TK_ * TN_ * bytes_b
     c_bytes_tile = TM_ * TN_ * bytes_out
     mem_bw = dev.memory_bandwidth
     step_mem_t = (a_bytes_step + b_bytes_step) / mem_bw
@@ -509,7 +539,7 @@ def matmul_perf_reference(device: Device, m: int, k: int, n: int,
     flops = 2 * batch * m * k * n
     # actual main-memory traffic of the chosen mapping
     mm_bytes = int(batch * (n_t_m * n_t_n * n_t_k)[i2, 0, 0]
-                   * (TM[i2] * TK[i2] + TK[i2] * TN[i2]) * bytes_in
+                   * (TM[i2] * TK[i2] * bytes_a + TK[i2] * TN[i2] * bytes_b)
                    + batch * (n_t_m * n_t_n)[i2, 0, 0] * TM[i2] * TN[i2]
                    * bytes_out)
 

@@ -60,10 +60,12 @@ def _finish(name: str, dev: Device, compute_t: float, mem_t: float,
 
 
 def matmul(dev: Device, m: int, k: int, n: int, batch: int = 1,
-           bytes_in: int = 2, bytes_out: int = 2,
-           b_shared: bool = False, name: str = "matmul") -> OpResult:
-    r = matmul_perf(dev, m, k, n, batch=batch, bytes_in=bytes_in,
-                    bytes_out=bytes_out, b_shared=b_shared)
+           bytes_a: float = 2, bytes_b: float = 2, bytes_out: float = 2,
+           bytes_acc: float = 2, b_shared: bool = False,
+           mac_scale: float = 1.0, name: str = "matmul") -> OpResult:
+    r = matmul_perf(dev, m, k, n, batch=batch, bytes_a=bytes_a,
+                    bytes_b=bytes_b, bytes_out=bytes_out, bytes_acc=bytes_acc,
+                    b_shared=b_shared, mac_scale=mac_scale)
     return OpResult(name, r.latency + dev.kernel_launch_overhead_s, r.flops,
                     r.main_memory_bytes, r.mapping.bound, r.mapping)
 

@@ -18,6 +18,7 @@ from ..configs.base import ModelConfig
 from .evaluator import Evaluator
 from .hardware import System
 from .graph import Plan
+from .precision import DEFAULT, PrecisionPolicy
 from .study import Case, Study
 from .workload import Workload
 
@@ -56,11 +57,16 @@ def enumerate_plans(system: System, cfg: ModelConfig,
 def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
                out_len: int, objective: str = "latency",
                max_tp: Optional[int] = None,
-               evaluator: Optional[Evaluator] = None) -> List[RankedPlan]:
+               evaluator: Optional[Evaluator] = None,
+               policy: PrecisionPolicy = DEFAULT) -> List[RankedPlan]:
     """Rank every candidate plan: a Study with one case per plan, splitting
-    the global batch over each plan's dp replicas."""
+    the global batch over each plan's dp replicas. `policy` prices the whole
+    sweep at a quantization point — the memory-fit gate sees the quantized
+    weight/KV footprint, so int8-weights plans that would not fit at fp16
+    stay in the ranking."""
     cases = [Case(system, cfg, plan,
-                  Workload(max(1, batch // plan.dp), in_len, out_len))
+                  Workload(max(1, batch // plan.dp), in_len, out_len),
+                  policy=policy)
              for plan in enumerate_plans(system, cfg, max_tp=max_tp)]
     res = Study(cases=cases,
                 evaluators={system: evaluator} if evaluator else None).run()
@@ -73,9 +79,10 @@ def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
 
 def best_plan(system: System, cfg: ModelConfig, batch: int, in_len: int,
               out_len: int, objective: str = "latency",
-              evaluator: Optional[Evaluator] = None) -> RankedPlan:
+              evaluator: Optional[Evaluator] = None,
+              policy: PrecisionPolicy = DEFAULT) -> RankedPlan:
     ranked = rank_plans(system, cfg, batch, in_len, out_len, objective,
-                        evaluator=evaluator)
+                        evaluator=evaluator, policy=policy)
     fitting = [r for r in ranked if r.fits]
     if not fitting:
         raise ValueError(

@@ -32,10 +32,15 @@ class RooflinePoint:
 
 
 def matmul_roofline(dev: Device, m: int, k: int, n: int, batch: int = 1,
-                    bytes_elt: int = 2) -> RooflinePoint:
+                    bytes_a: float = 2, bytes_b: float = 2,
+                    bytes_out: float = 2,
+                    mac_scale: float = 1.0) -> RooflinePoint:
+    """Memory term = sum of per-operand widths (each tensor streamed once);
+    compute term scaled by the narrow-datatype issue rate so it stays a
+    lower bound for the mapper's scaled cycle counts (ISSUE 4)."""
     flops = 2.0 * batch * m * k * n
-    bytes_ = batch * (m * k + k * n + m * n) * bytes_elt
-    return RooflinePoint(flops / dev.peak_matmul_flops,
+    bytes_ = batch * (m * k * bytes_a + k * n * bytes_b + m * n * bytes_out)
+    return RooflinePoint(flops / (dev.peak_matmul_flops * mac_scale),
                          bytes_ / dev.memory_bandwidth)
 
 
@@ -57,7 +62,8 @@ def spec_roofline(dev: Device, spec) -> RooflinePoint:
                      ScanSpec, SoftmaxSpec, TrafficSpec)
     if isinstance(spec, MatmulSpec):
         return matmul_roofline(dev, spec.m, spec.k, spec.n, spec.batch,
-                               spec.bytes_in)
+                               spec.bytes_a, spec.bytes_b, spec.bytes_out,
+                               spec.mac_scale)
     if isinstance(spec, SoftmaxSpec):
         n = spec.rows * spec.cols
         return op_roofline(dev, 4.0 * n,

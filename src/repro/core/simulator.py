@@ -42,6 +42,7 @@ from . import inference_model as im
 from .evaluator import Evaluator
 from .graph import Graph, LayerCost, Plan, build_model
 from .hardware import System
+from .precision import DEFAULT, PrecisionPolicy
 from .scheduler import SlotScheduler
 from .workload import Trace, TrafficWorkload
 
@@ -122,7 +123,8 @@ def _axes(traffic: TrafficWorkload) -> Tuple[List[int], List[int]]:
     return in_pts, kv_pts
 
 
-def _graphs_and_axes(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload
+def _graphs_and_axes(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload,
+                     policy: PrecisionPolicy = DEFAULT
                      ) -> Tuple[List[Graph], List[int], List[int]]:
     """(graphs, in_pts, kv_pts) — the graph list is laid out as
     [wave prefills at in_pts | refill prefills at in_pts | decodes at
@@ -132,21 +134,23 @@ def _graphs_and_axes(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload
         raise ValueError("traffic has an empty trace")
     in_pts, kv_pts = _axes(traffic)
     B = traffic.batch
-    graphs = ([build_model(cfg, plan, B, S, kv_len=S) for S in in_pts]
-              + [build_model(cfg, plan, 1, S, kv_len=S) for S in in_pts]
-              + [build_model(cfg, plan, B, seq=1, kv_len=kv)
+    graphs = ([build_model(cfg, plan, B, S, kv_len=S, policy=policy)
+               for S in in_pts]
+              + [build_model(cfg, plan, 1, S, kv_len=S, policy=policy)
+                 for S in in_pts]
+              + [build_model(cfg, plan, B, seq=1, kv_len=kv, policy=policy)
                  for kv in kv_pts])
     return graphs, in_pts, kv_pts
 
 
-def trace_graphs(cfg: ModelConfig, plan: Plan,
-                 traffic: TrafficWorkload) -> List[Graph]:
+def trace_graphs(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload,
+                 policy: PrecisionPolicy = DEFAULT) -> List[Graph]:
     """Every symbolic graph simulate() will price for this traffic — wave
     prefills (batch=slots) and refill prefills (batch=1) at the sampled
     prompt lengths, plus decode rounds at the sampled kv points. Exposed so
     study.Study can pre-collect the GEMM shapes of a whole serve-stage grid
     into one device-axis stacked mapper search."""
-    return _graphs_and_axes(cfg, plan, traffic)[0]
+    return _graphs_and_axes(cfg, plan, traffic, policy)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -247,9 +251,22 @@ class SimResult:
 
 def simulate(system: System, cfg: ModelConfig, plan: Plan,
              traffic: TrafficWorkload,
-             evaluator: Optional[Evaluator] = None) -> SimResult:
+             evaluator: Optional[Evaluator] = None,
+             policy: PrecisionPolicy = DEFAULT) -> SimResult:
     """Replay `traffic.trace` through the engine's slot scheduler, pricing
-    every wave/round analytically. See the module docstring for the model."""
+    every wave/round analytically. See the module docstring for the model.
+
+    `policy` prices every wave/round at a quantization point. The slot
+    count stays `traffic.batch` — to let a quantized KV cache raise it,
+    size the TrafficWorkload with
+    `slots=inference_model.max_batch(..., policy=...)` (an int8-KV policy
+    budgets roughly twice the fp16 slots at equal memory; the serve-stage
+    Study memory gate checks that budget under the case's policy)."""
+    if not isinstance(policy, PrecisionPolicy):
+        raise TypeError(
+            f"simulate()'s `policy` is a precision.PrecisionPolicy, got "
+            f"{policy!r} — the scheduler policy string "
+            f"('continuous'/'static') belongs on the TrafficWorkload")
     trace = traffic.trace
     n = len(trace)
     if n == 0:
@@ -260,13 +277,13 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
     ev = im._evaluator(system, evaluator)
 
     # ---- price all sampled graphs in ONE batched evaluation --------------
-    graphs, in_pts, kv_pts = _graphs_and_axes(cfg, plan, traffic)
+    graphs, in_pts, kv_pts = _graphs_and_axes(cfg, plan, traffic, policy)
     costs = ev.evaluate_many(graphs)
     k = len(in_pts)
     wave_tbl = _Interp(in_pts, costs[:k])            # batch=slots prefill
     one_tbl = _Interp(in_pts, costs[k:2 * k])        # batch=1 refill prefill
     dec_tbl = _Interp(kv_pts, costs[2 * k:])         # batch=slots decode
-    dec_fill = im.pp_fill(system, plan, B, cfg.d_model)
+    dec_fill = im.pp_fill(system, plan, B, cfg.d_model, policy)
 
     sched = SlotScheduler(B, policy=traffic.policy)
     recs = [RequestStats(i, r.arrival, r.in_len, r.out_len)
@@ -305,13 +322,14 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
             if sched.idle:
                 S = max(r.in_len for r in wave)
                 dt = account(wave_tbl.at(S),
-                             im.pp_fill(system, plan, B * S, cfg.d_model))
+                             im.pp_fill(system, plan, B * S, cfg.d_model,
+                                        policy))
             else:
                 dt = 0.0
                 for r in wave:
                     dt += account(one_tbl.at(r.in_len),
                                   im.pp_fill(system, plan, r.in_len,
-                                             cfg.d_model))
+                                             cfg.d_model, policy))
             slot_seconds += len(live) * dt
             t += dt
             prefill_busy += dt

@@ -38,6 +38,7 @@ from .graph import Plan, build_layer, build_model
 from .hardware import Device, System
 from .ir import Graph, MatmulSpec
 from .mapper import is_memoized, matmul_perf_batch_multi
+from .precision import DEFAULT, PrecisionPolicy, policy_tag
 from . import simulator as sim_mod
 from .workload import TrafficWorkload, Workload
 
@@ -55,21 +56,41 @@ STAGES = ("generate", "prefill", "decode", "layer", "serve")
 
 @dataclass(frozen=True)
 class Case:
-    """One point of the evaluation grid — frozen, hashable, declarative."""
+    """One point of the evaluation grid — frozen, hashable, declarative.
+
+    `policy` is the precision axis (ISSUE 4): it stamps per-operand byte
+    widths and compute rates on every graph this case builds, and prices the
+    memory-fit gate at quantized weight/KV footprints. (Not to be confused
+    with TrafficWorkload.policy, the scheduler policy string.)
+    `policy_label` names the grid-axis point in result rows (defaults to the
+    preset name / structural tag)."""
     system: System
     cfg: ModelConfig
     plan: Plan
     workload: Workload
     stage: str = "generate"
     label: str = ""
+    policy: PrecisionPolicy = DEFAULT
+    policy_label: str = ""
 
     def __post_init__(self):
         if self.stage not in STAGES:
             raise ValueError(f"unknown stage {self.stage!r}; have {STAGES}")
+        if not isinstance(self.policy, PrecisionPolicy):
+            raise TypeError(
+                f"Case.policy must be a precision.PrecisionPolicy, got "
+                f"{self.policy!r} — the scheduler policy string "
+                f"('continuous'/'static') belongs on the TrafficWorkload")
         if self.stage == "serve" and not isinstance(self.workload,
                                                     TrafficWorkload):
             raise ValueError("stage='serve' needs a TrafficWorkload "
                              "(slots + trace + policy)")
+
+    @property
+    def policy_tag(self) -> str:
+        """Row name of this case's precision point: the grid-axis label when
+        one was given, else the preset name / structural tag."""
+        return self.policy_label or policy_tag(self.policy)
 
 
 @dataclass(frozen=True)
@@ -101,6 +122,7 @@ class CaseResult:
             "device": c.system.device.name,
             "n_devices": c.system.device_count,
             "model": c.cfg.name,
+            "policy": c.policy_tag,
             "tp": c.plan.tp, "pp": c.plan.pp, "dp": c.plan.dp,
             "ep": c.plan.ep,
             "batch": w.batch, "in_len": w.in_len, "out_len": w.out_len,
@@ -186,11 +208,17 @@ class StudyResult:
 
     def filter(self, **kw) -> List[CaseResult]:
         """Select rows by case attributes: device (name), model (cfg name),
-        system, plan, workload, stage, label, batch, in_len, out_len."""
-        def val(r: CaseResult, key: str):
+        system, plan, workload, stage, label, policy (a PrecisionPolicy, or
+        a string matching the row's policy tag — the grid-axis key / preset
+        name / structural tag shown in to_rows()), batch, in_len, out_len."""
+        def matches(r: CaseResult, key: str, v) -> bool:
             c = r.case
+            if key == "policy":
+                if isinstance(v, str):
+                    return v in (c.policy_tag, policy_tag(c.policy))
+                return c.policy == v
             try:
-                return {
+                return v == {
                     "device": c.system.device.name,
                     "model": c.cfg.name,
                     "system": c.system,
@@ -204,8 +232,9 @@ class StudyResult:
                 }[key]
             except KeyError:
                 raise KeyError(f"unknown filter key {key!r}")
+
         return [r for r in self.results
-                if all(val(r, k) == v for k, v in kw.items())]
+                if all(matches(r, k, v) for k, v in kw.items())]
 
     def get(self, **kw) -> CaseResult:
         hits = self.filter(**kw)
@@ -240,34 +269,44 @@ class Study:
                  plans: PlanAxis = None,
                  workloads: Union[Mapping[str, Workload],
                                   Sequence[Workload], None] = None,
+                 policies: Union[Mapping[str, PrecisionPolicy],
+                                 Sequence[PrecisionPolicy], None] = None,
                  cases: Optional[Iterable[Case]] = None,
                  stage: str = "generate",
                  enforce_fits: bool = True,
                  evaluators: Optional[Mapping[System, Evaluator]] = None
                  ) -> None:
         if cases is not None:
-            if any(x is not None for x in (systems, configs, workloads)) \
-                    or plans is not None:
+            if any(x is not None for x in (systems, configs, workloads,
+                                           policies)) or plans is not None:
                 raise ValueError("pass either an explicit case list OR grid "
                                  "axes, not both")
             self.cases = list(cases)
         else:
             if not systems or not configs or not workloads:
                 raise ValueError("a grid Study needs systems, configs and "
-                                 "workloads (plans default to [Plan()])")
+                                 "workloads (plans default to [Plan()], "
+                                 "policies to [precision.DEFAULT])")
             self.cases = self._expand(systems, configs, plans, workloads,
-                                      stage)
+                                      policies, stage)
         self.enforce_fits = enforce_fits
         self._evaluators: Dict[System, Evaluator] = \
             dict(evaluators) if evaluators else {}
         self._prices: Dict[tuple, tuple] = {}   # (device, link_bw) -> price
 
     @staticmethod
-    def _expand(systems, configs, plans, workloads, stage) -> List[Case]:
+    def _expand(systems, configs, plans, workloads, policies,
+                stage) -> List[Case]:
         if isinstance(workloads, Mapping):
             wl_items = list(workloads.items())
         else:
             wl_items = [(w.tag, w) for w in workloads]
+        if policies is None:
+            pol_items = [("", DEFAULT)]
+        elif isinstance(policies, Mapping):
+            pol_items = list(policies.items())    # keys name the row points
+        else:
+            pol_items = [("", p) for p in policies]
         if plans is None:
             plans = [Plan()]
         elif plans != "auto":
@@ -281,9 +320,11 @@ class Study:
                 else:
                     plan_list = plans
                 for plan in plan_list:
-                    for label, w in wl_items:
-                        out.append(Case(system, cfg, plan, w, stage=stage,
-                                        label=label))
+                    for pname, pol in pol_items:
+                        for label, w in wl_items:
+                            out.append(Case(system, cfg, plan, w,
+                                            stage=stage, label=label,
+                                            policy=pol, policy_label=pname))
         return out
 
     # ------------------------------------------------------------------
@@ -298,22 +339,22 @@ class Study:
     def _graphs(case: Case) -> List[Graph]:
         """The symbolic graphs this case will evaluate (for shape pre-pass
         AND, for the layer stage, the evaluation itself)."""
-        w, cfg, plan = case.workload, case.cfg, case.plan
+        w, cfg, plan, pol = case.workload, case.cfg, case.plan, case.policy
         if case.stage == "generate":
             graphs, _ = im.generate_graphs(cfg, plan, w.batch, w.in_len,
-                                           w.out_len, w.samples)
+                                           w.out_len, w.samples, pol)
             return graphs
         if case.stage == "prefill":
             return [build_model(cfg, plan, w.batch, w.in_len,
-                                kv_len=w.in_len)]
+                                kv_len=w.in_len, policy=pol)]
         if case.stage == "decode":
             return [build_model(cfg, plan, w.batch, seq=1,
-                                kv_len=w.total_len)]
+                                kv_len=w.total_len, policy=pol)]
         if case.stage == "serve":
-            return sim_mod.trace_graphs(cfg, plan, w)
+            return sim_mod.trace_graphs(cfg, plan, w, pol)
         # layer: single-layer prefill + decode microbenchmark graphs
-        return [build_layer(cfg, plan, 0, w.batch, w.in_len, w.in_len),
-                build_layer(cfg, plan, 0, w.batch, 1, w.total_len)]
+        return [build_layer(cfg, plan, 0, w.batch, w.in_len, w.in_len, pol),
+                build_layer(cfg, plan, 0, w.batch, 1, w.total_len, pol)]
 
     def _price(self, system: System) -> tuple:
         """(area_mm2, device_cost_usd) — computed once per distinct device
@@ -343,7 +384,7 @@ class Study:
         for case in self.cases:
             w = case.workload
             mem = im.memory_per_device(case.cfg, case.plan, w.batch,
-                                       w.total_len)
+                                       w.total_len, case.policy)
             fits = mem <= case.system.device.memory_capacity
             prelim.append((case, mem, fits))
 
@@ -362,8 +403,7 @@ class Study:
                     s = node.spec
                     if not isinstance(s, MatmulSpec):
                         continue
-                    pair = (dev, (s.m, s.k, s.n, s.batch, s.bytes_in,
-                                  s.bytes_out, s.b_shared))
+                    pair = (dev, s.shape)
                     if pair not in seen and not is_memoized(*pair):
                         seen.add(pair)
                         pairs.append(pair)
@@ -395,31 +435,33 @@ class Study:
                   price_a: float, price_c: float,
                   sys_cost: float) -> CaseResult:
         w, cfg, plan, system = case.workload, case.cfg, case.plan, case.system
+        pol = case.policy
         dec_dom = "n/a"
         sim = None
         if case.stage == "serve":
-            sim = sim_mod.simulate(system, cfg, plan, w, evaluator=ev)
+            sim = sim_mod.simulate(system, cfg, plan, w, evaluator=ev,
+                                   policy=pol)
             latency = sim.e2e(50)           # median request e2e
             thr = sim.goodput
             pf, dc = sim.prefill_busy, sim.decode_busy
             dom, flops, bytes_ = sim.dominant, sim.flops, sim.bytes
         elif case.stage == "generate":
             rep = im.generate(system, cfg, plan, w.batch, w.in_len, w.out_len,
-                              samples=w.samples, evaluator=ev)
+                              samples=w.samples, evaluator=ev, policy=pol)
             latency = rep.latency
             thr = im.throughput_from_generate(rep, plan, w.batch, w.out_len)
             pf, dc = rep.breakdown["prefill"], rep.breakdown["decode"]
             dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
         elif case.stage == "prefill":
             rep = im.prefill(system, cfg, plan, w.batch, w.in_len,
-                             evaluator=ev)
+                             evaluator=ev, policy=pol)
             latency = pf = rep.latency
             dc = 0.0
             thr = w.tokens_in * plan.dp * plan.pp / latency
             dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
         elif case.stage == "decode":
             rep = im.decode_step(system, cfg, plan, w.batch, w.total_len,
-                                 evaluator=ev)
+                                 evaluator=ev, policy=pol)
             latency = dc = rep.latency
             pf = 0.0
             thr = w.batch * plan.dp * plan.pp / latency

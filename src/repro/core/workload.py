@@ -15,6 +15,11 @@ x traces through `core/simulator.py` (stage="serve").
 Presets cover the paper's six in/out evaluation shapes (Table IV / Fig. 10:
 256/256, 512/1024, 1024/1024, 2048/256, 256/2048, 2048/2048 at batch 16)
 and our serving shapes (DESIGN.md §5 assignment table analogues).
+
+ISSUE 4 adds the precision axis: `PRECISION_POLICIES` re-exports the named
+quantization points (core/precision.py) so a grid declares
+``Study(..., workloads=WORKLOADS, policies=PRECISION_POLICIES)`` and one
+stacked mapper search prices systems x plans x workloads x policies.
 """
 from __future__ import annotations
 
@@ -22,6 +27,9 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, Sequence, Tuple, Union
 
 import numpy as np
+
+from .precision import POLICIES as PRECISION_POLICIES  # noqa: F401  (axis
+#   preset re-export: workload.py is the "grid axes" module users import)
 
 
 @dataclass(frozen=True)

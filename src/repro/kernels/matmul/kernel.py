@@ -56,3 +56,57 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 256,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# int8 path (ISSUE 4): integer MACs, fp32 accumulation, fused dequantize
+# ---------------------------------------------------------------------------
+
+def _matmul_int8_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *,
+                        n_k: int):
+    """Per k-block: an exact int8 x int8 -> int32 dot (the narrow-datapath
+    MAC array the analytical model prices at 2x fp16 rate), accumulated
+    across blocks in an fp32 VMEM scratch; the store fuses the per-row /
+    per-column dequantization scales."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    part = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc_ref[...] += part.astype(jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * sa_ref[...] * sb_ref[...]
+                      ).astype(o_ref.dtype)
+
+
+def matmul_int8_pallas(a: jax.Array, b: jax.Array, a_scale: jax.Array,
+                       b_scale: jax.Array, *, bm: int = 256, bk: int = 512,
+                       bn: int = 256, out_dtype=jnp.float32,
+                       interpret: bool = False) -> jax.Array:
+    """C[M,N] = (A_q[M,K] @ B_q[K,N]) * a_scale[M,1] * b_scale[1,N] for
+    symmetric per-row(A)/per-column(B) int8 quantization."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert a_scale.shape == (m, 1) and b_scale.shape == (1, n), \
+        (a_scale.shape, b_scale.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_matmul_int8_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b, a_scale, b_scale)

@@ -3,6 +3,12 @@
 mapper_blocks() asks the LLMCompass mapper (the paper's contribution) for
 the performance-optimal VMEM tiling of a given GEMM on the TPU preset and
 returns it as Pallas block sizes — the mapper doubles as a block autotuner.
+
+ISSUE 4 adds the quantized paths the precision subsystem prices:
+`matmul_int8` (per-row/per-column symmetric scales, integer MACs, fp32
+accumulation, fused dequantize) and `matmul_fp8` (e4m3 cast-through into
+the standard kernel) — so the numeric tree stays honest about the int8/fp8
+GEMMs the analytical model claims 2x MAC rate and 1-byte traffic for.
 """
 from __future__ import annotations
 
@@ -11,8 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import matmul_pallas  # noqa: E402
-from .ref import matmul_ref
+from .kernel import matmul_int8_pallas, matmul_pallas  # noqa: E402
+from .ref import (matmul_fp8_ref, matmul_int8_ref, matmul_ref, quantize_fp8,
+                  quantize_int8)
 
 
 def _on_tpu() -> bool:
@@ -50,4 +57,44 @@ def matmul(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
     return out[:m, :n]
 
 
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_int8(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
+                interpret: bool | None = None):
+    """Quantized GEMM: int8-quantize A per row and B per column (symmetric,
+    scale = amax/127), multiply with integer MACs + fp32 accumulation, and
+    dequantize in the epilogue. Input/output are float arrays; the float
+    result approximates `matmul(a, b)` to quantization error (~1%), and
+    matches `matmul_int8_ref` (quantize-dequantize oracle) to fp32
+    association error."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = a.shape[0], b.shape[1]
+    qa, sa = quantize_int8(a, axis=1)
+    qb, sb = quantize_int8(b, axis=0)
+    bm_, bk_, bn_ = min(bm, m), min(bk, a.shape[1]), min(bn, n)
+    # zero-pad: padded int8 entries are 0, so they add nothing to the sums;
+    # scale pads are 1 so padded rows/cols dequantize to finite (sliced) junk
+    qa = _pad_to(qa, (bm_, bk_))
+    qb = _pad_to(qb, (bk_, bn_))
+    sa = jnp.pad(sa, [(0, qa.shape[0] - m), (0, 0)], constant_values=1.0)
+    sb = jnp.pad(sb, [(0, 0), (0, qb.shape[1] - n)], constant_values=1.0)
+    out = matmul_int8_pallas(qa, qb, sa, sb, bm=bm_, bk=bk_, bn=bn_,
+                             interpret=interpret)
+    return out[:m, :n].astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_fp8(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
+               interpret: bool | None = None):
+    """fp8 (e4m3) GEMM: operands rounded to e4m3 storage, multiplied through
+    the standard fp32-accumulating kernel — the 1-byte-traffic path the
+    precision subsystem prices for fp8 policies."""
+    af = quantize_fp8(a).astype(jnp.float32)
+    bf = quantize_fp8(b).astype(jnp.float32)
+    return matmul(af, bf, bm=bm, bk=bk, bn=bn,
+                  interpret=interpret).astype(a.dtype)
+
+
 reference = matmul_ref
+reference_int8 = matmul_int8_ref
+reference_fp8 = matmul_fp8_ref

@@ -1,7 +1,49 @@
-"""Pure-jnp oracle for the tiled matmul kernel."""
+"""Pure-jnp oracles for the tiled matmul kernels, including the quantized
+paths (ISSUE 4): symmetric int8 quantize/dequantize and fp8 (e4m3)
+cast-through references the Pallas kernels are tested against."""
 import jax.numpy as jnp
 
 
 def matmul_ref(a, b, out_dtype=None):
     out_dtype = out_dtype or a.dtype
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def quantize_int8(x, axis: int):
+    """Symmetric per-vector int8 quantization along `axis` (the reduction
+    axis of the GEMM): scale = amax/127 per kept vector. Returns (q, scale)
+    with scale shaped to broadcast against x."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def matmul_int8_ref(a, b, out_dtype=jnp.float32):
+    """Quantize-dequantize oracle: per-row(A)/per-column(B) int8 symmetric
+    quantization, fp32 GEMM on the dequantized values. The kernel computes
+    the same quantized products with integer MACs — they must agree to fp32
+    association error."""
+    qa, sa = quantize_int8(a, axis=1)
+    qb, sb = quantize_int8(b, axis=0)
+    return jnp.dot(dequantize_int8(qa, sa), dequantize_int8(qb, sb),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def quantize_fp8(x):
+    """fp8 (e4m3) cast-through: the storage format the analytical model
+    prices at 1 byte / 2x MAC rate. No per-vector scales — e4m3's dynamic
+    range covers normalized activations/weights."""
+    return x.astype(jnp.float8_e4m3fn)
+
+
+def matmul_fp8_ref(a, b, out_dtype=jnp.float32):
+    """fp8 quantize-dequantize oracle: fp32 GEMM on e4m3-rounded values."""
+    af = quantize_fp8(a).astype(jnp.float32)
+    bf = quantize_fp8(b).astype(jnp.float32)
+    return jnp.dot(af, bf,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

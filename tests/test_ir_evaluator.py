@@ -40,13 +40,18 @@ def _rel(a, b):
 # 1. mapper engine vs dense reference
 # ---------------------------------------------------------------------------
 
-SHAPES = [(1, 128, 128, 1, 2, 2, False),
-          (16, 12288, 12288, 1, 2, 2, False),
-          (16384, 896, 1152, 1, 2, 2, False),
-          (2048, 128, 2048, 8, 2, 2, False),
-          (2048, 128, 2048, 8, 2, 2, True),
-          (7, 64, 2048, 112, 2, 2, False),
-          (333, 777, 129, 3, 2, 4, False)]
+# (m, k, n, batch, bytes_a, bytes_b, bytes_out, bytes_acc, b_shared,
+#  mac_scale) — incl. mixed per-operand widths and narrow-datatype rates
+SHAPES = [(1, 128, 128, 1, 2, 2, 2, 2, False, 1.0),
+          (16, 12288, 12288, 1, 2, 2, 2, 2, False, 1.0),
+          (16384, 896, 1152, 1, 2, 2, 2, 2, False, 1.0),
+          (2048, 128, 2048, 8, 2, 2, 2, 2, False, 1.0),
+          (2048, 128, 2048, 8, 2, 2, 2, 2, True, 1.0),
+          (7, 64, 2048, 112, 2, 2, 2, 2, False, 1.0),
+          (333, 777, 129, 3, 2, 2, 4, 2, False, 1.0),
+          (16, 12288, 12288, 1, 2, 1, 2, 4, False, 1.0),   # int8 weights
+          (512, 4096, 4096, 1, 1, 1, 1, 4, False, 2.0),    # w8a8
+          (64, 8192, 8192, 1, 2, 0.5, 2, 4, False, 1.0)]   # int4 weights
 
 
 @pytest.mark.parametrize("dev_fn", [hw.nvidia_a100, hw.google_tpu_v5e,
@@ -57,8 +62,9 @@ def test_batched_mapper_matches_dense_reference(dev_fn):
     batched = matmul_perf_batch(dev, SHAPES)
     for sh, rb in zip(SHAPES, batched):
         rr = matmul_perf_reference(dev, sh[0], sh[1], sh[2], batch=sh[3],
-                                   bytes_in=sh[4], bytes_out=sh[5],
-                                   b_shared=sh[6])
+                                   bytes_a=sh[4], bytes_b=sh[5],
+                                   bytes_out=sh[6], bytes_acc=sh[7],
+                                   b_shared=sh[8], mac_scale=sh[9])
         assert rb.latency == rr.latency, sh
         assert rb.flops == rr.flops, sh
         assert rb.main_memory_bytes == rr.main_memory_bytes, sh
@@ -69,7 +75,8 @@ def test_batched_mapper_matches_dense_reference(dev_fn):
 def test_single_shape_wrapper_matches_batch():
     dev = hw.nvidia_a100()
     r1 = matmul_perf(dev, 512, 4096, 1024)
-    r2 = matmul_perf_batch(dev, [(512, 4096, 1024, 1, 2, 2, False)])[0]
+    r2 = matmul_perf_batch(dev, [(512, 4096, 1024, 1, 2, 2, 2, 2, False,
+                                  1.0)])[0]
     assert r1.latency == r2.latency
     assert r1.mapping == r2.mapping
 

@@ -1,12 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
-randomized shapes (interpret mode on CPU)."""
+randomized shapes (interpret mode on CPU). Property tests skip without
+hypothesis; the fixed sweeps always run (_hypothesis_compat shim)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hypothesis_compat import given, settings, st
 
 from repro import kernels as K
 
@@ -44,6 +44,57 @@ def test_matmul_property(m, k, n):
     b = jax.random.normal(key, (k, n), jnp.float32)
     out = K.matmul.matmul(a, b, bm=64, bk=64, bn=64)
     assert rel_err(out, K.matmul.reference(a, b)) < 2e-5
+
+
+# ---------------- quantized matmul (ISSUE 4) ----------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (100, 200, 50), (1, 300, 77),
+                                   (513, 129, 257)])
+def test_matmul_int8_kernel_vs_ref(m, k, n):
+    """Integer-MAC kernel == quantize-dequantize oracle (same quantized
+    products; only fp32 association order differs)."""
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(3), (k, n), jnp.float32)
+    out = K.matmul.matmul_int8(a, b, bm=128, bk=128, bn=128)
+    assert out.shape == (m, n) and out.dtype == jnp.float32
+    assert rel_err(out, K.matmul.reference_int8(a, b)) < 1e-4
+
+
+def test_matmul_int8_approximates_exact():
+    """Per-row/per-column symmetric int8 keeps the GEMM within ~1-2% of the
+    exact fp32 result on normal data — the accuracy the analytical model's
+    int8 pricing implicitly assumes."""
+    key = jax.random.PRNGKey(42)
+    a = jax.random.normal(key, (192, 384), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(43), (384, 160), jnp.float32)
+    out = K.matmul.matmul_int8(a, b, bm=64, bk=128, bn=64)
+    assert rel_err(out, K.matmul.reference(a, b)) < 5e-2
+
+
+def test_matmul_int8_scale_invariance():
+    """Symmetric per-vector scales make the quantized GEMM invariant to
+    per-row input scaling up to quantization error."""
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (64, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(8), (256, 96), jnp.float32)
+    rows = jnp.linspace(0.01, 100.0, 64)[:, None]
+    out = K.matmul.matmul_int8(a * rows, b, bm=64, bk=64, bn=64)
+    ref = K.matmul.matmul_int8(a, b, bm=64, bk=64, bn=64) * rows
+    assert rel_err(out, ref) < 5e-2
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (100, 200, 50),
+                                   (513, 129, 257)])
+def test_matmul_fp8_kernel_vs_ref(m, k, n):
+    key = jax.random.PRNGKey(m + k + n)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(9), (k, n), jnp.float32)
+    out = K.matmul.matmul_fp8(a, b, bm=128, bk=128, bn=128)
+    assert rel_err(out, K.matmul.reference_fp8(a, b)) < 2e-5
+    # e4m3 has a 3-bit mantissa: within ~5% of exact on normal data
+    assert rel_err(out, K.matmul.reference(a, b)) < 8e-2
 
 
 # ---------------- flash attention ----------------

@@ -1,0 +1,363 @@
+"""ISSUE 4: precision subsystem tests.
+
+Four layers of guarantees:
+  1. the DEFAULT (fp16-everywhere) policy is a no-op: identical graphs,
+     frozen seed-commit numbers bit-for-bit (tests/data/seed_reference.json);
+  2. spec stamping is the policy, exactly: every operand width in a built
+     graph equals the policy's per-class width, and the matmul roofline's
+     byte count is the sum of per-operand widths (the mapper never goes
+     below it);
+  3. quantization moves the model the right way: int8 weights strictly
+     speed up memory-bound decode, w8a8 speeds up compute-bound prefill,
+     int8 KV doubles the slot budget, int8 MACs shrink the die;
+  4. the precision axis composes: Study grids sweep policies, the planner
+     memory gate admits quantized plans fp16 rejects, the serving simulator
+     prices policies.
+"""
+import json
+import os
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import area, hardware as hw
+from repro.core import inference_model as im
+from repro.core import planner
+from repro.core.evaluator import Evaluator
+from repro.core.graph import Plan, build_model
+from repro.core.ir import (ElementwiseSpec, MatmulSpec, NormSpec,
+                           SoftmaxSpec, TrafficSpec)
+from repro.core.mapper import clear_matmul_cache, matmul_perf
+from repro.core.precision import (DEFAULT, DTYPES, FP16, FP32, INT8,
+                                  PrecisionPolicy, get_dtype, get_policy,
+                                  mac_scale, POLICIES, policy_tag)
+from repro.core.roofline import spec_roofline
+from repro.core.study import Case, Study
+from repro.core.workload import (PRECISION_POLICIES, Trace, TrafficWorkload,
+                                 Workload)
+
+REL = 1e-9
+_REF_PATH = os.path.join(os.path.dirname(__file__), "data",
+                         "seed_reference.json")
+
+
+def _rel(a, b):
+    return abs(a - b) / max(abs(b), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# 1. registry + policy surface
+# ---------------------------------------------------------------------------
+
+def test_dtype_registry():
+    assert DTYPES["fp16"].bytes == 2 and isinstance(DTYPES["fp16"].bytes, int)
+    assert DTYPES["int8"].bytes == 1
+    assert DTYPES["fp32"].bytes == 4
+    assert DTYPES["int4"].bytes == 0.5
+    assert get_dtype("bf16").mac_throughput == 1.0
+    with pytest.raises(KeyError):
+        get_dtype("fp12")
+
+
+def test_mac_scale_promotes_to_slower_operand():
+    assert mac_scale(FP16, FP16) == 1.0
+    assert mac_scale(FP16, INT8) == 1.0      # dequantize-into-fp16 MACs
+    assert mac_scale(INT8, INT8) == 2.0
+    assert mac_scale(FP32, INT8) == 0.5
+    assert mac_scale(DTYPES["int4"], DTYPES["int4"]) == 4.0
+
+
+def test_policy_presets_and_tags():
+    assert POLICIES["fp16"] == DEFAULT == PrecisionPolicy()
+    assert PRECISION_POLICIES is POLICIES      # workload.py grid-axis export
+    w8 = get_policy("int8-weights")
+    assert w8.weights == INT8 and w8.activations == FP16
+    assert w8.accumulator == FP32              # honest fp32 acc off-default
+    assert policy_tag(w8) == "int8-weights"
+    assert policy_tag(DEFAULT) == "fp16"
+    custom = DEFAULT.with_(kv_cache=get_dtype("int4"))
+    assert policy_tag(custom) == custom.tag    # unregistered -> structural
+    with pytest.raises(KeyError):
+        get_policy("int7")
+
+
+def test_weight_and_attn_gemm_kwargs():
+    w8 = get_policy("int8-weights")
+    wg, ag = w8.weight_gemm(), w8.attn_gemm()
+    assert wg["bytes_b"] == 1 and wg["bytes_a"] == 2
+    assert wg["bytes_acc"] == 4 and wg["mac_scale"] == 1.0
+    assert ag["bytes_b"] == 2                  # KV stays fp16 in this preset
+    a8 = get_policy("w8a8")
+    assert a8.weight_gemm()["mac_scale"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# 2. fp16 default is a bit-for-bit no-op
+# ---------------------------------------------------------------------------
+
+def test_default_policy_builds_identical_graphs():
+    cfg = get_config("qwen2-0.5b")
+    g_imp = build_model(cfg, Plan(tp=2), 4, 128, kv_len=128)
+    g_exp = build_model(cfg, Plan(tp=2), 4, 128, kv_len=128, policy=DEFAULT)
+    assert g_imp == g_exp
+
+
+def test_fp16_policy_matches_frozen_seed_commit_numbers():
+    """The acceptance gate: explicit fp16-everywhere PrecisionPolicy
+    reproduces the frozen seed latencies/flops/bytes bit-for-bit."""
+    ref = json.load(open(_REF_PATH))
+    fp16 = get_policy("fp16")
+    for arch, tag, system, plan in [
+            ("gpt3-175b", "dgx_a100_4", hw.dgx_a100(4), Plan(tp=4)),
+            ("stablelm-1.6b", "tpu_v5e_16", hw.tpu_v5e_pod(16),
+             Plan(tp=2, dp=8))]:
+        cfg = get_config(arch)
+        r = ref[f"{arch}/{tag}"]
+        pf = im.prefill(system, cfg, plan, batch=4, seq=512, policy=fp16)
+        dc = im.decode_step(system, cfg, plan, batch=4, kv_len=768,
+                            policy=fp16)
+        g = im.generate(system, cfg, plan, 4, 512, 64, policy=fp16)
+        assert _rel(pf.latency, r["prefill"]) < REL, (arch, tag)
+        assert _rel(pf.flops, r["prefill_flops"]) < REL, (arch, tag)
+        assert _rel(pf.bytes, r["prefill_bytes"]) < REL, (arch, tag)
+        assert _rel(dc.latency, r["decode"]) < REL, (arch, tag)
+        assert _rel(g.latency, r["generate"]) < REL, (arch, tag)
+
+
+def test_fp16_policy_area_unchanged():
+    for dev in (hw.nvidia_ga100(), hw.latency_oriented()):
+        assert dev.core.lane.systolic_array.dtype == "fp16"
+    assert area.MAC_AREA["fp16"] == area.AREA_FP16_MAC
+    assert area.device_area(hw.nvidia_ga100(), 600).total_mm2 == \
+        pytest.approx(826, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# 3. spec stamping == the policy (the per-operand-width property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "granite-moe-3b-a800m"])
+def test_policy_widths_stamp_every_spec(name, arch):
+    """Every operand width in a built graph is the policy's class width:
+    matmul A/out at activations, B at weights or kv_cache, acc at
+    accumulator; softmax/norm/elementwise at activations."""
+    p = get_policy(name)
+    cfg = get_config(arch)
+    g = build_model(cfg, Plan(tp=2), 2, 64, kv_len=64, policy=p)
+    saw_weight = saw_kv = False
+    for node in g:
+        s = node.spec
+        if isinstance(s, MatmulSpec):
+            assert s.bytes_a == p.activations.bytes, node.name
+            assert s.bytes_out == p.activations.bytes, node.name
+            assert s.bytes_acc == p.accumulator.bytes, node.name
+            assert s.bytes_b in (p.weights.bytes, p.kv_cache.bytes), node.name
+            saw_weight |= s.bytes_b == p.weights.bytes
+            saw_kv |= node.name in ("qk_t", "a_mul_v") \
+                and s.bytes_b == p.kv_cache.bytes
+        elif isinstance(s, (SoftmaxSpec, NormSpec)):
+            assert s.bytes_in == s.bytes_out == p.activations.bytes, node.name
+        elif isinstance(s, ElementwiseSpec):
+            assert s.bytes_elt == p.activations.bytes, node.name
+    assert saw_weight and saw_kv
+
+
+def test_decode_kv_append_priced_at_kv_width():
+    cfg = get_config("qwen2-0.5b")
+    kv8 = get_policy("int8-kv")
+    g16 = build_model(cfg, Plan(), 2, 1, kv_len=128)
+    g8 = build_model(cfg, Plan(), 2, 1, kv_len=128, policy=kv8)
+    t16 = [n.spec.n_bytes for n in g16
+           if isinstance(n.spec, TrafficSpec) and n.name == "kv_append"]
+    t8 = [n.spec.n_bytes for n in g8
+          if isinstance(n.spec, TrafficSpec) and n.name == "kv_append"]
+    assert t16 and t8 and t8[0] == t16[0] / 2
+
+
+@given(ba=st.sampled_from([0.5, 1, 2, 4]), bb=st.sampled_from([0.5, 1, 2, 4]),
+       bo=st.sampled_from([1, 2, 4]), scale=st.sampled_from([0.5, 1.0, 2.0]))
+@settings(max_examples=12, deadline=None)
+def test_matmul_bytes_are_per_operand_sums(ba, bb, bo, scale):
+    """The roofline byte count of a MatmulSpec is exactly the sum of
+    per-operand widths, and the mapper's chosen mapping never streams less
+    (nor runs faster than the width-scaled roofline)."""
+    dev = hw.nvidia_a100()
+    m, k, n = 256, 4096, 1024
+    spec = MatmulSpec(m, k, n, bytes_a=ba, bytes_b=bb, bytes_out=bo,
+                      mac_scale=scale)
+    rf = spec_roofline(dev, spec)
+    expected = m * k * ba + k * n * bb + m * n * bo
+    assert _rel(rf.memory_s * dev.memory_bandwidth, expected) < REL
+    clear_matmul_cache()
+    r = matmul_perf(dev, m, k, n, bytes_a=ba, bytes_b=bb, bytes_out=bo,
+                    mac_scale=scale)
+    clear_matmul_cache()
+    assert r.main_memory_bytes >= expected * (1 - 1e-12)
+    assert r.latency >= rf.latency * 0.999
+
+
+# ---------------------------------------------------------------------------
+# 4. quantization moves the model the right way
+# ---------------------------------------------------------------------------
+
+GPT3 = get_config("gpt3-175b")
+NODE = hw.dgx_a100(4)
+
+
+def test_int8_weights_speed_up_memory_bound_decode():
+    """Decode streams weights: halving bytes_b must strictly cut latency
+    AND total traffic, with flops unchanged (the acceptance criterion)."""
+    plan = Plan(tp=4)
+    dc16 = im.decode_step(NODE, GPT3, plan, batch=8, kv_len=3072)
+    assert dc16.bound["memory"] > dc16.bound.get("compute", 0)  # mem-bound
+    dc8 = im.decode_step(NODE, GPT3, plan, batch=8, kv_len=3072,
+                         policy=get_policy("int8-weights"))
+    assert dc8.latency < dc16.latency
+    assert dc8.bytes < dc16.bytes
+    assert dc8.flops == dc16.flops
+    # weight streaming dominates decode: the cut is substantial, not epsilon
+    assert dc8.latency < 0.75 * dc16.latency
+
+
+def test_w8a8_speeds_up_compute_bound_prefill():
+    """Prefill is compute-bound: the 2x int8 issue rate must show up."""
+    plan = Plan(tp=4)
+    pf16 = im.prefill(NODE, GPT3, plan, batch=8, seq=2048)
+    assert pf16.bound["compute"] > pf16.bound.get("memory", 0)
+    pf8 = im.prefill(NODE, GPT3, plan, batch=8, seq=2048,
+                     policy=get_policy("w8a8"))
+    assert pf8.latency < 0.75 * pf16.latency
+
+
+def test_int8_kv_doubles_slot_budget():
+    cfg = get_config("qwen3-1.7b")
+    sys1 = hw.make_system(hw.nvidia_a100(), 1)
+    plan = Plan()
+    kv8 = get_policy("int8-kv")
+    m16 = im.memory_per_device(cfg, plan, 16, 8192)
+    m8 = im.memory_per_device(cfg, plan, 16, 8192, kv8)
+    # the saving is exactly half the fp16 KV bytes
+    kv_bytes = 16 * 8192 * cfg.kv_bytes_per_token(2)
+    assert _rel(m16 - m8, kv_bytes / 2) < REL
+    b16 = im.max_batch(sys1, cfg, plan, 16384)
+    b8 = im.max_batch(sys1, cfg, plan, 16384, kv8)
+    assert b8 > 1.5 * b16       # KV dominates at 16k context: ~2x slots
+
+
+def test_int4_weights_quarter_weight_memory():
+    cfg = get_config("qwen2-0.5b")
+    w4 = get_policy("int4-weights")
+    m16 = im.memory_per_device(cfg, Plan(), 1, 1)
+    m4 = im.memory_per_device(cfg, Plan(), 1, 1, w4)
+    saved = cfg.param_count() * (2 - 0.5)
+    assert _rel(m16 - m4, saved) < REL
+
+
+def test_narrow_mac_shrinks_die():
+    assert area.MAC_AREA["int4"] < area.MAC_AREA["int8"] \
+        < area.MAC_AREA["fp8"] < area.MAC_AREA["fp16"] < area.MAC_AREA["fp32"]
+    a100 = hw.nvidia_a100()
+    i8 = hw.with_mac_dtype(a100, "int8")
+    r16 = area.device_area(a100, 600)
+    r8 = area.device_area(i8, 600)
+    assert r8.total_mm2 < r16.total_mm2
+    assert _rel(r8.breakdown["systolic_arrays"],
+                0.3 * r16.breakdown["systolic_arrays"]) < REL
+    with pytest.raises(KeyError):
+        area.device_area(hw.with_mac_dtype(a100, "fp12"), 600)
+
+
+# ---------------------------------------------------------------------------
+# 5. the axis composes: Study grids, planner gate, serving simulator
+# ---------------------------------------------------------------------------
+
+def test_study_policies_axis():
+    cfg = get_config("qwen2-0.5b")
+    node = hw.dgx_a100(4)
+    w = Workload(2, 128, 16, samples=4)
+    pols = {"fp16": get_policy("fp16"), "int8-weights":
+            get_policy("int8-weights")}
+    res = Study(systems=[node], configs=[cfg], plans=[Plan(tp=2, dp=2)],
+                workloads={"w": w}, policies=pols).run()
+    assert len(res) == 2
+    assert {r["policy"] for r in res.to_rows()} == set(pols)
+    # the fp16 row is bit-for-bit the row of a Study without the axis
+    base = Study(systems=[node], configs=[cfg], plans=[Plan(tp=2, dp=2)],
+                 workloads={"w": w}).run()[0]
+    r16 = res.filter(policy="fp16")[0]
+    assert r16.latency == base.latency
+    assert r16.throughput == base.throughput
+    r8 = res.filter(policy="int8-weights")[0]
+    assert r8.latency < r16.latency
+
+
+def test_study_policy_mapping_keys_name_rows():
+    """User-supplied axis keys label the rows and round-trip filter()."""
+    cfg = get_config("qwen2-0.5b")
+    node = hw.dgx_a100(4)
+    custom = PrecisionPolicy(weights=INT8, kv_cache=INT8, accumulator=FP32)
+    res = Study(systems=[node], configs=[cfg], plans=[Plan(tp=2, dp=2)],
+                workloads={"w": Workload(2, 64, 8, samples=4)},
+                policies={"my-quant": custom}).run()
+    assert res.to_rows()[0]["policy"] == "my-quant"
+    assert res.filter(policy="my-quant") == res.results
+    assert res.filter(policy="w8kv8") == res.results   # preset tag matches
+    assert res.filter(policy=custom) == res.results
+    assert res.filter(policy="fp16") == []
+
+
+def test_policy_kwarg_rejects_scheduler_string():
+    """The PrecisionPolicy kwarg fails fast when handed the scheduler
+    policy string ('continuous'/'static') by mistake."""
+    cfg = get_config("qwen3-1.7b")
+    sys1 = hw.make_system(hw.nvidia_a100(), 1)
+    traffic = TrafficWorkload.from_trace(
+        Trace.constant(2, 0.0, 32, 4), slots=2)
+    from repro.core.simulator import simulate
+    with pytest.raises(TypeError):
+        simulate(sys1, cfg, Plan(), traffic, policy="static")
+    with pytest.raises(TypeError):
+        Case(sys1, cfg, Plan(), traffic, stage="serve", policy="static")
+
+
+def test_planner_gate_admits_quantized_plans():
+    """GPT-3 fp16 on 4xA100 fits under NO plan (87.5 GB/device of weights
+    alone); int8 weights bring it under 80 GB — best_plan must find it."""
+    with pytest.raises(ValueError):
+        planner.best_plan(NODE, GPT3, 1, 128, 16)
+    best = planner.best_plan(NODE, GPT3, 1, 128, 16,
+                             policy=get_policy("w8kv8"))
+    assert best.fits
+    assert best.memory_per_device < NODE.device.memory_capacity
+
+
+def test_simulator_prices_policies():
+    """Uniform-trace replay under int8-KV: decode rounds stream half the
+    cache, so goodput must improve on the fp16 replay."""
+    cfg = get_config("qwen3-1.7b")
+    sys1 = hw.make_system(hw.nvidia_a100(), 1)
+    from repro.core.simulator import simulate
+    traffic = TrafficWorkload.from_trace(
+        Trace.constant(4, 0.0, 512, 128), slots=4)
+    ev = Evaluator(sys1)
+    r16 = simulate(sys1, cfg, Plan(), traffic, evaluator=ev)
+    r8 = simulate(sys1, cfg, Plan(), traffic, evaluator=ev,
+                  policy=get_policy("w8kv8"))
+    assert r8.tokens_out == r16.tokens_out
+    assert r8.goodput > r16.goodput
+
+
+def test_serve_stage_case_carries_policy():
+    cfg = get_config("qwen3-1.7b")
+    sys1 = hw.make_system(hw.nvidia_a100(), 1)
+    traffic = TrafficWorkload.from_trace(
+        Trace.constant(4, 0.0, 128, 16), slots=4)
+    res = Study(cases=[
+        Case(sys1, cfg, Plan(), traffic, stage="serve"),
+        Case(sys1, cfg, Plan(), traffic, stage="serve",
+             policy=get_policy("w8kv8"))]).run()
+    assert res[1].sim.goodput > res[0].sim.goodput
+    assert res.to_rows()[1]["policy"] == "w8kv8"

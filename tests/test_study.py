@@ -44,10 +44,12 @@ def _rel(a, b):
 DEVICES = [hw.nvidia_a100(), hw.amd_mi210(), hw.google_tpu_v5e(),
            hw.compute_design("C")]
 
-SHAPES = [(1, 128, 128, 1, 2, 2, False),
-          (16, 12288, 12288, 1, 2, 2, False),
-          (2048, 128, 2048, 8, 2, 2, True),
-          (333, 777, 129, 3, 2, 4, False)]
+SHAPES = [(1, 128, 128, 1, 2, 2, 2, 2, False, 1.0),
+          (16, 12288, 12288, 1, 2, 2, 2, 2, False, 1.0),
+          (2048, 128, 2048, 8, 2, 2, 2, 2, True, 1.0),
+          (333, 777, 129, 3, 2, 2, 4, 2, False, 1.0),
+          (16, 12288, 12288, 1, 2, 1, 2, 4, False, 1.0),    # int8 weights
+          (512, 4096, 4096, 1, 1, 1, 1, 4, False, 2.0)]     # w8a8
 
 
 def test_device_axis_batch_matches_reference_mixed_grid():
@@ -58,8 +60,9 @@ def test_device_axis_batch_matches_reference_mixed_grid():
     clear_matmul_cache()
     for (dev, sh), rb in zip(pairs, out):
         rr = matmul_perf_reference(dev, sh[0], sh[1], sh[2], batch=sh[3],
-                                   bytes_in=sh[4], bytes_out=sh[5],
-                                   b_shared=sh[6])
+                                   bytes_a=sh[4], bytes_b=sh[5],
+                                   bytes_out=sh[6], bytes_acc=sh[7],
+                                   b_shared=sh[8], mac_scale=sh[9])
         assert rb.latency == rr.latency, (dev.name, sh)
         assert rb.flops == rr.flops, (dev.name, sh)
         assert rb.main_memory_bytes == rr.main_memory_bytes, (dev.name, sh)
@@ -70,15 +73,16 @@ def test_device_axis_batch_matches_reference_mixed_grid():
 @given(m=st.sampled_from([1, 16, 77, 512, 4096]),
        k=st.sampled_from([64, 500, 12288]),
        n=st.sampled_from([1, 128, 3072]),
-       batch=st.sampled_from([1, 3, 8]))
+       batch=st.sampled_from([1, 3, 8]),
+       wbytes=st.sampled_from([2, 1, 0.5]))
 @settings(max_examples=15, deadline=None)
-def test_device_axis_batch_property(m, k, n, batch):
-    shape = (m, k, n, batch, 2, 2, False)
+def test_device_axis_batch_property(m, k, n, batch, wbytes):
+    shape = (m, k, n, batch, 2, wbytes, 2, 2, False, 1.0)
     clear_matmul_cache()
     out = matmul_perf_batch_multi([(d, shape) for d in DEVICES])
     clear_matmul_cache()
     for d, rb in zip(DEVICES, out):
-        rr = matmul_perf_reference(d, m, k, n, batch=batch)
+        rr = matmul_perf_reference(d, m, k, n, batch=batch, bytes_b=wbytes)
         assert rb.latency == rr.latency, d.name
         assert rb.mapping == rr.mapping, d.name
 
