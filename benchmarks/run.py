@@ -23,8 +23,8 @@ def main(argv=None) -> None:
 
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
-                   mapper_speed, planner_archs, precision_sweep, serving_sim,
-                   study_speed)
+                   mapper_speed, planner_archs, precision_sweep,
+                   schedule_overlap, serving_sim, study_speed)
 
     if args.quick:
         modules = [
@@ -35,6 +35,7 @@ def main(argv=None) -> None:
             ("study_speed", study_speed, {"quick": True}),
             ("serving_sim", serving_sim, {"quick": True}),
             ("precision_sweep", precision_sweep, {"quick": True}),
+            ("schedule_overlap", schedule_overlap, {"quick": True}),
         ]
     else:
         modules = [
@@ -49,6 +50,7 @@ def main(argv=None) -> None:
             ("study_speed", study_speed, {}),
             ("serving_sim", serving_sim, {}),
             ("precision_sweep", precision_sweep, {}),
+            ("schedule_overlap", schedule_overlap, {}),
         ]
 
     print("name,us_per_call,derived")

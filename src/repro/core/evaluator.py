@@ -26,9 +26,11 @@ from typing import Dict, List, Sequence
 from .hardware import Device, Link, System
 from . import operators as ops
 from . import interconnect as net
-from .ir import (CollectiveSpec, ElementwiseSpec, Graph, MatmulSpec, NormSpec,
-                 OpSpec, ScanSpec, SoftmaxSpec, TrafficSpec)
+from .ir import (CollectiveSpec, ElementwiseSpec, FusedMatmulSpec, Graph,
+                 MatmulSpec, NormSpec, OpSpec, ScanSpec, SoftmaxSpec,
+                 TrafficSpec, resource_of)
 from .mapper import matmul_perf_batch
+from .schedule import schedule_graph
 
 
 @dataclass
@@ -41,11 +43,21 @@ class EvalStats:
     matmul_searches: int = 0         # unique GEMM shapes actually searched
     batched_searches: int = 0        # matmul_perf_batch invocations
     candidates_searched: int = 0     # dense-equivalent candidate count
+    serial_seconds: float = 0.0      # serial sum of overlap-scheduled graphs
+    scheduled_seconds: float = 0.0   # their resource-timeline makespans
 
     @property
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @property
+    def schedule_ratio(self) -> float:
+        """Scheduled-vs-serial latency ratio across all overlap-mode graphs
+        (< 1 means overlap hid work; 1.0 when nothing was scheduled). A
+        regression in overlap modeling shows up here in bench logs."""
+        return self.scheduled_seconds / self.serial_seconds \
+            if self.serial_seconds > 0 else 1.0
 
     def summary(self) -> str:
         return (f"graphs={self.graphs} nodes={self.nodes} "
@@ -53,7 +65,8 @@ class EvalStats:
                 f"hit_rate={self.hit_rate:.1%} "
                 f"matmul_searches={self.matmul_searches} "
                 f"batched_calls={self.batched_searches} "
-                f"candidates={self.candidates_searched}")
+                f"candidates={self.candidates_searched} "
+                f"sched_vs_serial={self.schedule_ratio:.3f}")
 
 
 def _single_device_system(device: Device) -> System:
@@ -100,6 +113,19 @@ class Evaluator:
                                 + dev.kernel_launch_overhead_s, r.flops,
                                 r.main_memory_bytes, r.mapping.bound,
                                 r.mapping)
+        if isinstance(spec, FusedMatmulSpec):
+            # one kernel: the GEMM (mapper-priced at its rescaled output
+            # traffic) plus tile-local vector epilogues — no per-epilogue
+            # launch overhead, no intermediate HBM round trip
+            r_mm = self._lookup(spec.gemm)
+            lat, flops = r_mm.latency, r_mm.flops
+            for e in spec.epilogue:
+                t, f = ops.fused_epilogue(dev, e)
+                lat += t
+                flops += f
+            return ops.OpResult("fused_matmul", lat, flops,
+                                r_mm.main_memory_bytes, r_mm.bound,
+                                r_mm.mapping)
         if isinstance(spec, SoftmaxSpec):
             return ops.softmax(dev, spec.rows, spec.cols, spec.bytes_in,
                                spec.bytes_out)
@@ -126,9 +152,14 @@ class Evaluator:
                     "link model; construct it with a System to price "
                     f"collectives (got {spec.kind})")
             n = spec.n_devices or self.system.device_count
-            fn = {"all_reduce": net.all_reduce,
-                  "reduce_scatter": net.reduce_scatter,
-                  "all_gather": net.all_gather,
+            if spec.kind == "all_reduce":
+                # reduction vector work priced at the payload's element width
+                return net.all_reduce(self.system, spec.n_bytes, n,
+                                      bytes_elt=spec.bytes_elt)
+            if spec.kind == "reduce_scatter":
+                return net.reduce_scatter(self.system, spec.n_bytes, n,
+                                          bytes_elt=spec.bytes_elt)
+            fn = {"all_gather": net.all_gather,
                   "all_to_all": net.all_to_all}.get(spec.kind)
             if fn is not None:
                 return fn(self.system, spec.n_bytes, n)
@@ -157,6 +188,8 @@ class Evaluator:
         for g in graphs:
             for node in g:
                 s = node.spec
+                if isinstance(s, FusedMatmulSpec):
+                    s = s.gemm            # the stacked search solves the base
                 if isinstance(s, MatmulSpec) and s not in self._cache \
                         and s not in seen:
                     seen.add(s)
@@ -176,12 +209,19 @@ class Evaluator:
         return seen
 
     # ------------------------------------------------------------------
-    def evaluate(self, graph: Graph) -> "LayerCost":
-        return self.evaluate_many([graph])[0]
+    def evaluate(self, graph: Graph, overlap: bool = False) -> "LayerCost":
+        return self.evaluate_many([graph], overlap=overlap)[0]
 
-    def evaluate_many(self, graphs: Sequence[Graph]) -> List["LayerCost"]:
+    def evaluate_many(self, graphs: Sequence[Graph],
+                      overlap: bool = False) -> List["LayerCost"]:
         """Evaluate several graphs; unique matmuls across ALL of them are
-        solved in one batched mapper search first."""
+        solved in one batched mapper search first.
+
+        With `overlap=True` each graph is additionally list-scheduled over
+        per-resource timelines (core/schedule.py): the returned LayerCost's
+        `latency` is the dataflow makespan (collectives pipelined with their
+        producers) instead of the serial sum, and carries the per-op
+        start/end schedule."""
         from .graph import LayerCost      # late import: graph builds on ir
         prefetched = self._prefetch_matmuls(graphs) if self.batch_matmuls \
             else set()
@@ -200,5 +240,11 @@ class Evaluator:
                     node.name, r.latency * node.repeat,
                     r.flops * node.repeat,
                     r.main_memory_bytes * node.repeat, r.bound, r.mapping))
+            cost._resources = tuple(resource_of(n.spec) for n in g)
+            if overlap:
+                sch = schedule_graph(g, [o.latency for o in cost.ops])
+                cost.schedule = sch
+                self.stats.serial_seconds += sch.serial
+                self.stats.scheduled_seconds += sch.makespan
             out.append(cost)
         return out

@@ -44,13 +44,25 @@ class Plan:
 
 @dataclass
 class LayerCost:
+    """Evaluated graph cost. With `schedule` set (overlap-mode evaluation,
+    core/schedule.py) `latency` is the resource-timeline makespan and the
+    per-op start/end times are exposed; otherwise it is the seed's serial
+    sum in node order, bit-for-bit."""
     ops: List[ops.OpResult] = field(default_factory=list)
+    schedule: object = None         # Optional[schedule.Schedule]
 
     def add(self, r: ops.OpResult):
         self.ops.append(r)
 
     @property
     def latency(self) -> float:
+        if self.schedule is not None:
+            return self.schedule.makespan
+        return self.serial_latency
+
+    @property
+    def serial_latency(self) -> float:
+        """Serial (no-overlap) latency: the left-to-right sum."""
         return sum(o.latency for o in self.ops)
 
     @property
@@ -68,10 +80,31 @@ class LayerCost:
         return out
 
     def breakdown(self) -> dict:
+        """Additive per-name busy time (resource occupancy, not wall-clock
+        when scheduled — see critical_breakdown for path attribution)."""
         out: dict = {}
         for o in self.ops:
             out[o.name] = out.get(o.name, 0.0) + o.latency
         return out
+
+    def by_resource(self) -> dict:
+        """Per-resource busy seconds (compute / vector / link)."""
+        if self.schedule is not None:
+            return dict(self.schedule.busy)
+        out: dict = {}
+        for o, node_res in zip(self.ops, self._resources or ()):
+            out[node_res] = out.get(node_res, 0.0) + o.latency
+        return out
+
+    _resources: tuple = ()          # set by the evaluator (spec resources)
+
+    def critical_breakdown(self) -> dict:
+        """Critical-path (not additive) attribution: which ops the scheduled
+        makespan is actually waiting on. Falls back to the additive
+        breakdown when the graph was priced serially."""
+        if self.schedule is not None:
+            return self.schedule.critical_breakdown()
+        return self.breakdown()
 
 
 # ---------------------------------------------------------------------------
@@ -79,24 +112,35 @@ class LayerCost:
 # ---------------------------------------------------------------------------
 
 def _norm_spec(cfg: ModelConfig, rows: int,
-               policy: PrecisionPolicy = DEFAULT) -> NormSpec:
+               policy: PrecisionPolicy = DEFAULT,
+               plan: Plan = None) -> NormSpec:
     kind = "layernorm" if cfg.norm == "layernorm" else "rmsnorm"
     ab = policy.activations.bytes
+    if plan is not None and plan.sequence_parallel and plan.tp > 1:
+        # Megatron-style sequence parallelism: the norm (and the rest of the
+        # RS..AG region) runs on the token shard, 1/tp of the rows
+        rows = math.ceil(rows / plan.tp)
     return NormSpec(kind, rows, cfg.d_model, bytes_in=ab, bytes_out=ab)
 
 
 def _add_tp_collective(g: GraphBuilder, cfg: ModelConfig, plan: Plan,
                        tokens: int, name: str,
                        policy: PrecisionPolicy = DEFAULT) -> None:
-    """Per-layer activation synchronization under tensor parallelism."""
+    """Per-layer activation synchronization under tensor parallelism.
+
+    Chain deps are the true edges here: the collective consumes the output
+    of the node added just before it (the row-parallel GEMM), and the next
+    node consumes the synchronized activations."""
     if plan.tp <= 1:
         return
-    bytes_ = tokens * cfg.d_model * policy.activations.bytes
+    ab = policy.activations.bytes
+    bytes_ = tokens * cfg.d_model * ab
     if plan.sequence_parallel:
-        g.add(CollectiveSpec("reduce_scatter", bytes_, plan.tp), name + "_rs")
-        g.add(CollectiveSpec("all_gather", bytes_, plan.tp), name + "_ag")
+        g.add(CollectiveSpec("reduce_scatter", bytes_, plan.tp, ab),
+              name + "_rs")
+        g.add(CollectiveSpec("all_gather", bytes_, plan.tp, ab), name + "_ag")
         return
-    g.add(CollectiveSpec("all_reduce", bytes_, plan.tp), name)
+    g.add(CollectiveSpec("all_reduce", bytes_, plan.tp, ab), name)
 
 
 def build_attention(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
@@ -119,25 +163,32 @@ def build_attention(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
     w_mm, kv_mm = policy.weight_gemm(), policy.attn_gemm()
 
     g = GraphBuilder()
-    g.add(_norm_spec(cfg, toks, policy), prefix + "ln_attn")
-    g.add(MatmulSpec(toks, d, (hq + 2 * hkv) * dh, **w_mm),
-          prefix + "qkv_proj")
+    g.add(_norm_spec(cfg, toks, policy, plan), prefix + "ln_attn")
+    i_qkv = g.add(MatmulSpec(toks, d, (hq + 2 * hkv) * dh, **w_mm),
+                  prefix + "qkv_proj")
+    i_qk = i_qkv                   # most recent producer of the q/k tensors
     if cfg.qk_norm:
-        g.add(NormSpec("rmsnorm", toks * (hq + hkv), dh, bytes_in=ab,
-                       bytes_out=ab), prefix + "qk_norm")
+        i_qk = g.add(NormSpec("rmsnorm", toks * (hq + hkv), dh, bytes_in=ab,
+                              bytes_out=ab), prefix + "qk_norm")
     if cfg.rope_fraction > 0:
-        g.add(ElementwiseSpec("generic", toks * (hq + hkv) * dh, 6.0,
-                              bytes_elt=ab), prefix + "rope")
+        i_qk = g.add(ElementwiseSpec("generic", toks * (hq + hkv) * dh, 6.0,
+                                     bytes_elt=ab), prefix + "rope")
+    i_app = None
     if seq == 1:   # decode: append one token of KV at cache precision
-        g.add(TrafficSpec(batch * 2 * hkv * dh * policy.kv_cache.bytes),
-              prefix + "kv_append")
-    g.add(MatmulSpec(g_ * seq, dh, kv_eff, batch=batch * hkv, **kv_mm),
-          prefix + "qk_t")
-    g.add(SoftmaxSpec(batch * hq * seq, kv_eff, bytes_in=ab, bytes_out=ab),
-          prefix + "softmax")
-    g.add(MatmulSpec(g_ * seq, kv_eff, dh, batch=batch * hkv, **kv_mm),
-          prefix + "a_mul_v")
-    g.add(MatmulSpec(toks, hq * dh, d, **w_mm), prefix + "o_proj")
+        i_app = g.add(TrafficSpec(batch * 2 * hkv * dh
+                                  * policy.kv_cache.bytes),
+                      prefix + "kv_append", deps=(i_qk,))
+    qk_deps = (i_qk,) if i_app is None else (i_qk, i_app)
+    i_sc = g.add(MatmulSpec(g_ * seq, dh, kv_eff, batch=batch * hkv, **kv_mm),
+                 prefix + "qk_t", deps=qk_deps)
+    i_sm = g.add(SoftmaxSpec(batch * hq * seq, kv_eff, bytes_in=ab,
+                             bytes_out=ab), prefix + "softmax", deps=(i_sc,))
+    # a_mul_v reads the probabilities AND the V projection (via i_qk /
+    # kv_append) — a real two-producer join in the dataflow DAG
+    i_av = g.add(MatmulSpec(g_ * seq, kv_eff, dh, batch=batch * hkv, **kv_mm),
+                 prefix + "a_mul_v", deps=tuple(sorted({i_sm} | set(qk_deps))))
+    g.add(MatmulSpec(toks, hq * dh, d, **w_mm), prefix + "o_proj",
+          deps=(i_av,))
     _add_tp_collective(g, cfg, plan, toks, prefix + "allreduce_attn", policy)
     return g.build()
 
@@ -149,14 +200,15 @@ def build_mlp(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
     ab = policy.activations.bytes
     w_mm = policy.weight_gemm()
     g = GraphBuilder()
-    g.add(_norm_spec(cfg, toks, policy), "ln_mlp")
+    g.add(_norm_spec(cfg, toks, policy, plan), "ln_mlp")
 
     if cfg.n_experts:
         e_local = max(1, cfg.n_experts // plan.ep)
         g.add(MatmulSpec(toks, d, cfg.n_experts, **w_mm), "router")
         if plan.ep > 1:
             a2a = toks * cfg.top_k * d * ab
-            g.add(CollectiveSpec("all_to_all", a2a, plan.ep), "moe_dispatch")
+            g.add(CollectiveSpec("all_to_all", a2a, plan.ep, ab),
+                  "moe_dispatch")
         toks_e = math.ceil(toks * cfg.top_k / cfg.n_experts)
         ff = max(1, cfg.d_ff // plan.tp)
         n_up = 2 * ff if cfg.mlp_gated else ff
@@ -167,7 +219,7 @@ def build_mlp(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
         g.add(MatmulSpec(toks_e, ff, d, batch=e_local, **w_mm), "expert_down")
         if plan.ep > 1:
             g.add(CollectiveSpec("all_to_all", toks * cfg.top_k * d * ab,
-                                 plan.ep), "moe_combine")
+                                 plan.ep, ab), "moe_combine")
         g.add(ElementwiseSpec("generic", toks * d, 2 * cfg.top_k,
                               bytes_elt=ab), "moe_mix")
     else:
@@ -204,7 +256,7 @@ def build_rwkv(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
                    bytes_io=6 * toks * d_tp * ab), "wkv_scan")
     g.add(MatmulSpec(toks, d_tp, d, **w_mm), "tmix_out")
     if plan.tp > 1:
-        g.add(CollectiveSpec("all_reduce", toks * d * ab, plan.tp),
+        g.add(CollectiveSpec("all_reduce", toks * d * ab, plan.tp, ab),
               "allreduce_tmix")
     # channel mix
     ff = int(3.5 * d) // plan.tp
@@ -214,7 +266,7 @@ def build_rwkv(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
     g.add(ElementwiseSpec("generic", toks * ff, 3.0, bytes_elt=ab), "relu_sq")
     g.add(MatmulSpec(toks, ff, d, **w_mm), "cmix_down")
     if plan.tp > 1:
-        g.add(CollectiveSpec("all_reduce", toks * d * ab, plan.tp),
+        g.add(CollectiveSpec("all_reduce", toks * d * ab, plan.tp, ab),
               "allreduce_cmix")
     return g.build()
 
@@ -228,7 +280,7 @@ def build_rglru(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
     ab = policy.activations.bytes
     w_mm = policy.weight_gemm()
     g = GraphBuilder()
-    g.add(_norm_spec(cfg, toks, policy), "ln_rec")
+    g.add(_norm_spec(cfg, toks, policy, plan), "ln_rec")
     g.add(MatmulSpec(toks, d, 2 * d_tp, **w_mm), "rec_in_proj")
     g.add(ElementwiseSpec("generic", toks * d_tp,
                           2.0 * cfg.rglru_conv_width, bytes_elt=ab), "conv1d")
@@ -296,12 +348,20 @@ def build_model(cfg: ModelConfig, plan: Plan, batch: int, seq: int,
         g.extend(enc.scaled(cfg.n_encoder_layers, prefix="enc_"))
     if include_head:
         toks = batch * (seq if seq > 1 else 1)
-        # embedding gather reads weight-precision rows
-        g.add(TrafficSpec(toks * cfg.d_model * policy.weights.bytes), "embed")
-        g.add(_norm_spec(cfg, toks, policy), "ln_final")
+        i_last = len(g) - 1
+        # embedding gather reads weight-precision rows. Physically it runs
+        # BEFORE layer 0 consumes its output; since the head block is
+        # appended after the folded stack (seed ordering), keep it chained
+        # rather than a free source so the scheduler never hides traffic
+        # that sits on the serial prefix of the critical path.
+        i_emb = g.add(TrafficSpec(toks * cfg.d_model * policy.weights.bytes),
+                      "embed")
+        head_deps = (i_emb,) if i_last < 0 else (i_last, i_emb)
+        i_ln = g.add(_norm_spec(cfg, toks, policy), "ln_final",
+                     deps=head_deps)
         g.add(MatmulSpec(toks, cfg.d_model,
                          max(1, cfg.vocab_size // plan.tp),
-                         **policy.weight_gemm()), "lm_head")
+                         **policy.weight_gemm()), "lm_head", deps=(i_ln,))
     return g.build()
 
 

@@ -20,6 +20,7 @@ from typing import Dict, Optional
 
 from ..configs.base import ModelConfig
 from .evaluator import Evaluator
+from .fusion import SERIAL, FusionPolicy, fuse
 from .hardware import System
 from .graph import LayerCost, Plan, build_model
 from .precision import DEFAULT, PrecisionPolicy
@@ -33,6 +34,8 @@ class PerfReport:
     bytes: float
     breakdown: Dict[str, float] = field(default_factory=dict)
     bound: Dict[str, float] = field(default_factory=dict)
+    serial_latency: float = 0.0     # no-overlap sum (== latency when serial)
+    schedule: object = None         # per-op timeline (overlap mode, 1 graph)
 
     @property
     def dominant(self) -> str:
@@ -42,7 +45,9 @@ class PerfReport:
 def _report(cost: LayerCost) -> PerfReport:
     return PerfReport(latency=cost.latency, flops=cost.flops,
                       bytes=cost.bytes, breakdown=cost.breakdown(),
-                      bound=cost.by_bound())
+                      bound=cost.by_bound(),
+                      serial_latency=cost.serial_latency,
+                      schedule=cost.schedule)
 
 
 def _evaluator(system: System, evaluator: Optional[Evaluator]) -> Evaluator:
@@ -73,66 +78,87 @@ def pp_fill(system: System, plan: Plan, tokens: int, d_model: int,
 
 def prefill(system: System, cfg: ModelConfig, plan: Plan, batch: int,
             seq: int, evaluator: Optional[Evaluator] = None,
-            policy: PrecisionPolicy = DEFAULT) -> PerfReport:
+            policy: PrecisionPolicy = DEFAULT,
+            fusion: FusionPolicy = SERIAL) -> PerfReport:
     ev = _evaluator(system, evaluator)
-    cost = ev.evaluate(build_model(cfg, plan, batch, seq, kv_len=seq,
-                                   policy=policy))
+    cost = ev.evaluate(fuse(build_model(cfg, plan, batch, seq, kv_len=seq,
+                                        policy=policy), fusion),
+                       overlap=fusion.overlap)
     rep = _report(cost)
-    rep.latency += pp_fill(system, plan, batch * seq, cfg.d_model, policy)
+    fill = pp_fill(system, plan, batch * seq, cfg.d_model, policy)
+    rep.latency += fill
+    rep.serial_latency += fill
     return rep
 
 
 def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
                 kv_len: int, evaluator: Optional[Evaluator] = None,
-                policy: PrecisionPolicy = DEFAULT) -> PerfReport:
+                policy: PrecisionPolicy = DEFAULT,
+                fusion: FusionPolicy = SERIAL) -> PerfReport:
     ev = _evaluator(system, evaluator)
-    cost = ev.evaluate(build_model(cfg, plan, batch, seq=1, kv_len=kv_len,
-                                   policy=policy))
+    cost = ev.evaluate(fuse(build_model(cfg, plan, batch, seq=1,
+                                        kv_len=kv_len, policy=policy),
+                            fusion),
+                       overlap=fusion.overlap)
     rep = _report(cost)
-    rep.latency += pp_fill(system, plan, batch, cfg.d_model, policy)
+    fill = pp_fill(system, plan, batch, cfg.d_model, policy)
+    rep.latency += fill
+    rep.serial_latency += fill
     return rep
 
 
 def generate_graphs(cfg: ModelConfig, plan: Plan, batch: int, in_len: int,
                     out_len: int, samples: int = 8,
-                    policy: PrecisionPolicy = DEFAULT):
+                    policy: PrecisionPolicy = DEFAULT,
+                    fusion: FusionPolicy = SERIAL):
     """The exact symbolic graphs `generate` evaluates: the prefill graph plus
     one decode graph per KV trapezoid sample point. Exposed so study.Study
     can pre-collect every GEMM shape of a whole grid into one device-axis
     stacked mapper search before any case is priced. Returns (graphs, pts)
-    where pts are the sampled KV lengths (graphs[1:] align with pts)."""
+    where pts are the sampled KV lengths (graphs[1:] align with pts).
+    Graphs come back already rewritten under `fusion`'s kernel-fusion
+    rules."""
     pts = [in_len + round(i * (out_len - 1) / max(samples - 1, 1))
            for i in range(samples)]
     graphs = [build_model(cfg, plan, batch, in_len, kv_len=in_len,
                           policy=policy)] + \
         [build_model(cfg, plan, batch, seq=1, kv_len=kv, policy=policy)
          for kv in pts]
-    return graphs, pts
+    return [fuse(g, fusion) for g in graphs], pts
 
 
 def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
              in_len: int, out_len: int, samples: int = 8,
              evaluator: Optional[Evaluator] = None,
-             policy: PrecisionPolicy = DEFAULT) -> PerfReport:
+             policy: PrecisionPolicy = DEFAULT,
+             fusion: FusionPolicy = SERIAL) -> PerfReport:
     """prefill + out_len decode steps; decode latency integrated over the
     growing KV with `samples` trapezoid points (exact enough, hugely faster).
 
     The prefill graph and all `samples` decode graphs are evaluated in one
     batched call: their unique GEMM shapes share a single mapper search.
+    `fusion` selects the execution model: kernel-fusion rewrites and/or
+    overlap-scheduled (critical-path) latencies per graph.
     """
     ev = _evaluator(system, evaluator)
     graphs, pts = generate_graphs(cfg, plan, batch, in_len, out_len, samples,
-                                  policy)
-    costs = ev.evaluate_many(graphs)
+                                  policy, fusion)
+    costs = ev.evaluate_many(graphs, overlap=fusion.overlap)
 
     pf = _report(costs[0])
     pf_fill = pp_fill(system, plan, batch * in_len, cfg.d_model, policy)
     pf.latency += pf_fill
+    pf.serial_latency += pf_fill
     dec_fill = pp_fill(system, plan, batch, cfg.d_model, policy)
     lats = [c.latency + dec_fill for c in costs[1:]]
+    # the no-overlap pricing of the same graphs, integrated identically so
+    # PerfReport.serial_latency stays meaningful for the whole generation
+    # (and bit-for-bit equal to `latency` in serial mode)
+    ser_lats = [c.serial_latency + dec_fill for c in costs[1:]]
 
     total = pf.latency
-    dec = 0.0
+    serial_total = pf.serial_latency
+    dec = ser_dec = 0.0
     # per-sample trapezoid weights: sample i carries wts[i] of the out_len-1
     # integrated decode steps, +1 at pts[0] for the first token
     wts = [0.0] * samples
@@ -140,13 +166,15 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
         w = pts[i + 1] - pts[i] if i < samples - 2 \
             else out_len - 1 - (pts[i] - in_len)
         dec += (lats[i] + lats[i + 1]) / 2 * max(w, 0)
+        ser_dec += (ser_lats[i] + ser_lats[i + 1]) / 2 * max(w, 0)
         wts[i] += max(w, 0) / 2
         wts[i + 1] += max(w, 0) / 2
     if out_len == 1:
-        dec = 0.0
+        dec = ser_dec = 0.0
         wts = [0.0] * samples
     wts[0] += 1.0               # +1 first token
     total += dec + lats[0]
+    serial_total += ser_dec + ser_lats[0]
     # aggregate flops/bytes/bound over prefill + the integrated decode steps
     # (the decode graphs carry the same weights their latencies were
     # integrated with), so PerfReport.dominant reflects the whole generation
@@ -167,7 +195,7 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     rep = PerfReport(latency=total, flops=flops, bytes=bytes_,
                      breakdown={"prefill": pf.latency,
                                 "decode": dec + lats[0]},
-                     bound=bound)
+                     bound=bound, serial_latency=serial_total)
     return rep
 
 
@@ -234,11 +262,12 @@ def max_batch(system: System, cfg: ModelConfig, plan: Plan,
 def throughput(system: System, cfg: ModelConfig, plan: Plan, batch: int,
                in_len: int, out_len: int,
                evaluator: Optional[Evaluator] = None,
-               policy: PrecisionPolicy = DEFAULT) -> float:
+               policy: PrecisionPolicy = DEFAULT,
+               fusion: FusionPolicy = SERIAL) -> float:
     """Output tokens / second for the whole system (pipeline-full steady
     state: pp stages each process different microbatches concurrently)."""
     g = generate(system, cfg, plan, batch, in_len, out_len,
-                 evaluator=evaluator, policy=policy)
+                 evaluator=evaluator, policy=policy, fusion=fusion)
     return throughput_from_generate(g, plan, batch, out_len)
 
 

@@ -31,28 +31,38 @@ def p2p(system: System, n_bytes: float, name: str = "p2p") -> OpResult:
 
 
 def all_reduce(system: System, n_bytes: float, n_devices: int | None = None,
-               name: str = "all_reduce") -> OpResult:
+               name: str = "all_reduce",
+               bytes_elt: float = 2.0) -> OpResult:
     """Ring all-reduce: 2(n-1) steps of n_bytes/n chunks (reduce-scatter then
-    all-gather phase). Reduction adds vector work, usually negligible."""
+    all-gather phase). Reduction adds vector work, usually negligible —
+    priced at the collective's actual element width (`bytes_elt`): each of
+    the (n-1) reduce-scatter steps adds chunk/bytes_elt elements, so an fp8
+    payload does twice the adds per byte of an fp16 one."""
     n = n_devices or system.device_count
     if n <= 1:
         return OpResult(name, 0.0, 0.0, 0.0, "link")
     chunk = n_bytes / n
     t = 2 * (n - 1) * link_time(system.link, chunk)
-    red_flops = (n - 1) * chunk / 2        # adds on 2-byte elements
+    red_flops = (n - 1) * chunk / bytes_elt
     t += red_flops / system.device.peak_vector_flops
     return OpResult(name, t, red_flops, 2 * (n - 1) * chunk, "link")
 
 
 def reduce_scatter(system: System, n_bytes: float,
                    n_devices: int | None = None,
-                   name: str = "reduce_scatter") -> OpResult:
+                   name: str = "reduce_scatter",
+                   bytes_elt: float = 2.0) -> OpResult:
+    """Ring reduce-scatter: (n-1) steps, each reducing a chunk — the same
+    per-element adds as all_reduce's first phase, priced at `bytes_elt` so
+    SP (RS+AG) and AR plans compete on equal reduction accounting."""
     n = n_devices or system.device_count
     if n <= 1:
         return OpResult(name, 0.0, 0.0, 0.0, "link")
     chunk = n_bytes / n
     t = (n - 1) * link_time(system.link, chunk)
-    return OpResult(name, t, 0.0, (n - 1) * chunk, "link")
+    red_flops = (n - 1) * chunk / bytes_elt
+    t += red_flops / system.device.peak_vector_flops
+    return OpResult(name, t, red_flops, (n - 1) * chunk, "link")
 
 
 def all_gather(system: System, n_bytes: float, n_devices: int | None = None,

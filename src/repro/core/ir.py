@@ -15,11 +15,21 @@ Design rules (DESIGN.md §2):
   * a Node pairs a spec with a display name (for breakdowns) and a repeat
     count — the n identical transformer layers of a stage become one node
     with repeat=n, exactly mirroring the seed's evaluate-once-multiply path.
+
+Dataflow edges (ISSUE 5, DESIGN.md §9): a Graph is a DAG, not just an
+ordered list. Each Node carries `deps`, the indices of its producers within
+the Graph. `deps=None` means "the previous node" — so a graph built without
+explicit edges is a pure chain whose scheduled latency equals the serial
+sum bit-for-bit, recovering the pre-DAG behavior exactly. Every spec kind
+occupies one of three device resources (`resource_of`): the systolic/MXU
+datapath ("compute"), the vector/SIMD units + HBM streaming ("vector"), or
+the interconnect ("link"); core/schedule.py places nodes on per-resource
+timelines to price comm/compute overlap.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, Iterator, List, Tuple, Union
+from typing import Iterable, Iterator, List, Optional, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -104,10 +114,14 @@ class CollectiveSpec:
     n_bytes follows each primitive's convention in interconnect.py (e.g. the
     full gathered size for all_gather). n_devices is the participating group
     size, NOT the system size — the evaluator supplies the link parameters.
+    bytes_elt is the element width of the payload: all_reduce prices its
+    reduction vector work at the collective's actual element count
+    (n_bytes / bytes_elt adds) instead of assuming 2-byte elements.
     """
     kind: str     # "all_reduce" | "reduce_scatter" | "all_gather" | "all_to_all" | "p2p"
     n_bytes: float
     n_devices: int = 0              # 0 -> whole system
+    bytes_elt: Union[int, float] = 2
 
 
 @dataclass(frozen=True)
@@ -116,24 +130,76 @@ class TrafficSpec:
     n_bytes: float
 
 
+@dataclass(frozen=True)
+class FusedMatmulSpec:
+    """A matmul with elementwise/norm/softmax consumers fused as epilogues
+    (core/fusion.py): the intermediate tensor never round-trips HBM.
+
+    `gemm` is the *effective* mapper shape — its bytes_out is already
+    rescaled to the bytes the fused kernel actually writes (the final
+    epilogue's output; 0 when `stream_out` hands the result straight to the
+    next GEMM, flash-attention style). `epilogue` ops contribute only their
+    vector-unit compute time: their input reads and intermediate writes are
+    elided, exactly what kernels/flash_attention and kernels/matmul's fused
+    dequant epilogues do on real hardware.
+    """
+    gemm: MatmulSpec
+    epilogue: Tuple["OpSpec", ...]
+    stream_out: bool = False
+
+
 OpSpec = Union[MatmulSpec, SoftmaxSpec, NormSpec, ElementwiseSpec, ScanSpec,
-               CollectiveSpec, TrafficSpec]
+               CollectiveSpec, TrafficSpec, FusedMatmulSpec]
+
+
+def resource_of(spec: OpSpec) -> str:
+    """The device resource a spec occupies while executing (DESIGN.md §9):
+    "compute" (systolic/MXU datapath), "link" (interconnect), or "vector"
+    (vector units + HBM streaming) for everything else."""
+    if isinstance(spec, (MatmulSpec, FusedMatmulSpec)):
+        return "compute"
+    if isinstance(spec, CollectiveSpec):
+        return "link"
+    return "vector"
 
 
 @dataclass(frozen=True)
 class Node:
-    """One IR node: a spec, a breakdown name, and a repeat multiplier."""
+    """One IR node: a spec, a breakdown name, a repeat multiplier, and its
+    producer edges.
+
+    `deps` are indices of this node's producers within the owning Graph.
+    `deps=None` (the default) means "the immediately preceding node" — the
+    chain — so graphs built without explicit edges keep the exact serial
+    semantics of the pre-DAG IR. `deps=()` marks a source node.
+    """
     spec: OpSpec
     name: str
     repeat: int = 1
+    deps: Optional[Tuple[int, ...]] = None
+
+    @property
+    def resource(self) -> str:
+        return resource_of(self.spec)
+
+
+def _shift(node: Node, offset: int) -> Node:
+    if node.deps is None or offset == 0:
+        return node
+    return Node(node.spec, node.name, node.repeat,
+                tuple(d + offset for d in node.deps))
 
 
 @dataclass(frozen=True)
 class Graph:
-    """An ordered computation: a tuple of Nodes.
+    """A dataflow computation: a tuple of Nodes with producer edges.
 
-    Ordering matters only for reproducibility of float summation — totals are
-    accumulated in node order, matching the seed eager path bit-for-bit.
+    Node order is a valid topological order (deps always point backwards) and
+    fixes the float-summation order of serial totals — a pure chain evaluates
+    bit-for-bit like the seed eager path. Concatenation (`+`, and
+    GraphBuilder.extend) chains across the seam: the first node of the second
+    graph depends on the last node of the first, matching both the serial
+    semantics and the residual-stream dataflow of stacked layers.
     """
     nodes: Tuple[Node, ...] = ()
 
@@ -144,30 +210,63 @@ class Graph:
         return len(self.nodes)
 
     def __add__(self, other: "Graph") -> "Graph":
-        return Graph(self.nodes + other.nodes)
+        off = len(self.nodes)
+        return Graph(self.nodes + tuple(_shift(n, off) for n in other.nodes))
 
     def scaled(self, repeat: int, prefix: str = "") -> "Graph":
         """Multiply every node's repeat (identical layers -> one node x n)."""
-        return Graph(tuple(Node(n.spec, prefix + n.name, n.repeat * repeat)
+        return Graph(tuple(Node(n.spec, prefix + n.name, n.repeat * repeat,
+                                n.deps)
                            for n in self.nodes))
 
     def specs(self) -> List[OpSpec]:
         return [n.spec for n in self.nodes]
 
+    def edges(self) -> List[Tuple[int, ...]]:
+        """Resolved producer edges per node: explicit `deps` where given,
+        else the chain (previous node). Validates topological order."""
+        out: List[Tuple[int, ...]] = []
+        for i, n in enumerate(self.nodes):
+            deps = ((i - 1,) if i else ()) if n.deps is None else n.deps
+            if any(d >= i or d < 0 for d in deps):
+                raise ValueError(
+                    f"node {i} ({n.name!r}) has a forward/negative dep "
+                    f"{deps}; deps must point at earlier nodes")
+            out.append(deps)
+        return out
+
+    def consumers(self) -> List[List[int]]:
+        """Inverse of edges(): for each node, who reads its output."""
+        cons: List[List[int]] = [[] for _ in self.nodes]
+        for i, deps in enumerate(self.edges()):
+            for d in deps:
+                cons[d].append(i)
+        return cons
+
 
 class GraphBuilder:
-    """Mutable accumulator for Graph construction."""
+    """Mutable accumulator for Graph construction.
+
+    `add` returns the new node's index so builders can wire explicit
+    producer->consumer edges (`deps=`); omitting deps chains to the
+    previous node.
+    """
 
     def __init__(self) -> None:
         self._nodes: List[Node] = []
 
-    def add(self, spec: OpSpec, name: str, repeat: int = 1) -> "GraphBuilder":
-        self._nodes.append(Node(spec, name, repeat))
-        return self
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def add(self, spec: OpSpec, name: str, repeat: int = 1,
+            deps: Optional[Tuple[int, ...]] = None) -> int:
+        self._nodes.append(Node(spec, name, repeat, deps))
+        return len(self._nodes) - 1
 
     def extend(self, graph_or_nodes: Union[Graph, Iterable[Node]]
                ) -> "GraphBuilder":
-        self._nodes.extend(graph_or_nodes)
+        off = len(self._nodes)
+        self._nodes.extend(_shift(n, off) for n in graph_or_nodes)
         return self
 
     def build(self) -> Graph:

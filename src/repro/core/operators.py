@@ -189,6 +189,43 @@ def elementwise(dev: Device, n_elements: int, flops_per_elt: float = 1.0,
     return _finish(name, dev, cmp_t, mem_t, flops, bytes_)
 
 
+def fused_epilogue(dev: Device, spec) -> tuple:
+    """(seconds, flops) an op adds when fused into a producing matmul's
+    epilogue (DESIGN.md §9).
+
+    The epilogue runs tile-by-tile on the vector units after the GEMM
+    mainloop: its input arrives in on-chip buffers (no HBM read), its
+    launch overhead is amortized into the GEMM's, and — by the fusion
+    pass's construction — its output write replaces the GEMM's C write
+    (already repriced via the fused spec's bytes_out). What remains is the
+    vector-unit compute, with the same special-function ratios and
+    row-parallel utilization as the standalone models; softmax runs its
+    online single-pass form by construction (the flash-attention trick), so
+    the spill second-read never happens.
+    """
+    from .ir import ElementwiseSpec, NormSpec, SoftmaxSpec
+    if isinstance(spec, SoftmaxSpec):
+        n = spec.rows * spec.cols
+        flops = 4.0 * n
+        return (_vector_time(dev, flops, special_frac=0.25)
+                / _row_parallel_util(dev, spec.rows), flops)
+    if isinstance(spec, NormSpec):
+        n = spec.rows * spec.cols
+        flops = (8.0 if spec.kind == "layernorm" else 4.0) * n
+        return (_vector_time(dev, flops, special_frac=0.05)
+                / _row_parallel_util(dev, spec.rows), flops)
+    if isinstance(spec, ElementwiseSpec):
+        if spec.kind == "gelu":
+            flops = 10.0 * spec.n_elements
+            return _vector_time(dev, flops, special_frac=0.5), flops
+        if spec.kind == "silu_mul":
+            flops = 6.0 * spec.n_elements
+            return _vector_time(dev, flops, special_frac=0.4), flops
+        flops = spec.flops_per_elt * spec.n_elements
+        return _vector_time(dev, flops), flops
+    raise TypeError(f"cannot fuse {type(spec).__name__} as an epilogue")
+
+
 def memory_traffic(dev: Device, bytes_: float, name: str = "io") -> OpResult:
     """Pure data movement (e.g. KV-cache append, embedding gather)."""
     mem_t = bytes_ / dev.memory_bandwidth

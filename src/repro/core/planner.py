@@ -11,11 +11,12 @@ tp/pp siblings. Pass your own Evaluator to inspect cache statistics.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import List, Optional
 
 from ..configs.base import ModelConfig
 from .evaluator import Evaluator
+from .fusion import SERIAL, FusionPolicy
 from .hardware import System
 from .graph import Plan
 from .precision import DEFAULT, PrecisionPolicy
@@ -38,6 +39,11 @@ def _divisors(n: int) -> List[int]:
 
 def enumerate_plans(system: System, cfg: ModelConfig,
                     max_tp: Optional[int] = None) -> List[Plan]:
+    """Every tp/pp/dp/ep factorization of the system, plus a
+    sequence-parallel sibling for each tp>1 plan (RS+AG instead of AR, norms
+    on the token shard) — SP gives the overlap scheduler a pair of
+    collectives to hide behind the adjacent row-parallel GEMMs, and the
+    ranking prices it like any other candidate."""
     n = system.device_count
     plans = []
     for tp in _divisors(n):
@@ -50,23 +56,37 @@ def enumerate_plans(system: System, cfg: ModelConfig,
             ep = 1
             if cfg.n_experts:
                 ep = math.gcd(cfg.n_experts, dp) or 1
-            plans.append(Plan(tp=tp, pp=pp, dp=dp, ep=ep))
+            plan = Plan(tp=tp, pp=pp, dp=dp, ep=ep)
+            plans.append(plan)
+            if tp > 1 and _supports_sp(cfg):
+                plans.append(replace(plan, sequence_parallel=True))
     return plans
+
+
+def _supports_sp(cfg: ModelConfig) -> bool:
+    """Sequence parallelism is modeled for blocks that route their TP sync
+    through _add_tp_collective (attention / mlp / rglru); rwkv blocks
+    hardcode an all-reduce, so an SP sibling would be a mislabeled
+    duplicate of its AR twin."""
+    return any(cfg.block_kind(i) != "rwkv" for i in range(cfg.n_layers))
 
 
 def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
                out_len: int, objective: str = "latency",
                max_tp: Optional[int] = None,
                evaluator: Optional[Evaluator] = None,
-               policy: PrecisionPolicy = DEFAULT) -> List[RankedPlan]:
+               policy: PrecisionPolicy = DEFAULT,
+               fusion: FusionPolicy = SERIAL) -> List[RankedPlan]:
     """Rank every candidate plan: a Study with one case per plan, splitting
     the global batch over each plan's dp replicas. `policy` prices the whole
     sweep at a quantization point — the memory-fit gate sees the quantized
     weight/KV footprint, so int8-weights plans that would not fit at fp16
-    stay in the ranking."""
+    stay in the ranking. `fusion` prices it at an execution-model point:
+    under FULL, sequence-parallel siblings are ranked with their RS+AG
+    hidden behind the adjacent GEMMs."""
     cases = [Case(system, cfg, plan,
                   Workload(max(1, batch // plan.dp), in_len, out_len),
-                  policy=policy)
+                  policy=policy, fusion=fusion)
              for plan in enumerate_plans(system, cfg, max_tp=max_tp)]
     res = Study(cases=cases,
                 evaluators={system: evaluator} if evaluator else None).run()
@@ -80,9 +100,10 @@ def rank_plans(system: System, cfg: ModelConfig, batch: int, in_len: int,
 def best_plan(system: System, cfg: ModelConfig, batch: int, in_len: int,
               out_len: int, objective: str = "latency",
               evaluator: Optional[Evaluator] = None,
-              policy: PrecisionPolicy = DEFAULT) -> RankedPlan:
+              policy: PrecisionPolicy = DEFAULT,
+              fusion: FusionPolicy = SERIAL) -> RankedPlan:
     ranked = rank_plans(system, cfg, batch, in_len, out_len, objective,
-                        evaluator=evaluator, policy=policy)
+                        evaluator=evaluator, policy=policy, fusion=fusion)
     fitting = [r for r in ranked if r.fits]
     if not fitting:
         raise ValueError(

@@ -58,8 +58,14 @@ def spec_roofline(dev: Device, spec) -> RooflinePoint:
     Property: the mapper/operator latency for the same spec is never below
     this bound (tested) — the paper's Table V criticism of rooflines.
     """
-    from .ir import (CollectiveSpec, ElementwiseSpec, MatmulSpec, NormSpec,
-                     ScanSpec, SoftmaxSpec, TrafficSpec)
+    from .ir import (CollectiveSpec, ElementwiseSpec, FusedMatmulSpec,
+                     MatmulSpec, NormSpec, ScanSpec, SoftmaxSpec, TrafficSpec)
+    if isinstance(spec, FusedMatmulSpec):
+        # fused kernel: the GEMM's roofline at its rescaled (elided) output
+        # traffic, plus the epilogues' vector flops on the compute term
+        base = spec_roofline(dev, spec.gemm)
+        extra = sum(spec_roofline(dev, e).compute_s for e in spec.epilogue)
+        return RooflinePoint(base.compute_s + extra, base.memory_s)
     if isinstance(spec, MatmulSpec):
         return matmul_roofline(dev, spec.m, spec.k, spec.n, spec.batch,
                                spec.bytes_a, spec.bytes_b, spec.bytes_out,
@@ -112,6 +118,21 @@ def graph_roofline(system, graph) -> RooflinePoint:
         memory += pt.memory_s * node.repeat
     return RooflinePoint(compute, memory,
                          coll_bytes / system.link.bandwidth_bytes)
+
+
+def schedule_roofline(cost) -> RooflinePoint:
+    """Three-term resource roofline of a scheduled LayerCost (DESIGN.md §9):
+    per-resource busy times from the dataflow schedule — compute (MXU),
+    memory (vector/HBM streaming), collective (link). The scheduled makespan
+    is never below `.latency` of this point (max of the busy times), and the
+    gap between them is exactly the critical-path serialization the list
+    scheduler priced — the attribution a naive additive breakdown cannot
+    give. Works on serially-priced costs too (busy times from spec resource
+    tags)."""
+    busy = cost.by_resource()
+    return RooflinePoint(compute_s=busy.get("compute", 0.0),
+                         memory_s=busy.get("vector", 0.0),
+                         collective_s=busy.get("link", 0.0))
 
 
 # --- TPU v5e constants used by the dry-run three-term roofline -------------

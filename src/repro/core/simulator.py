@@ -40,6 +40,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from . import inference_model as im
 from .evaluator import Evaluator
+from .fusion import SERIAL, FusionPolicy, fuse
 from .graph import Graph, LayerCost, Plan, build_model
 from .hardware import System
 from .precision import DEFAULT, PrecisionPolicy
@@ -124,12 +125,14 @@ def _axes(traffic: TrafficWorkload) -> Tuple[List[int], List[int]]:
 
 
 def _graphs_and_axes(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload,
-                     policy: PrecisionPolicy = DEFAULT
+                     policy: PrecisionPolicy = DEFAULT,
+                     fusion: FusionPolicy = SERIAL
                      ) -> Tuple[List[Graph], List[int], List[int]]:
     """(graphs, in_pts, kv_pts) — the graph list is laid out as
     [wave prefills at in_pts | refill prefills at in_pts | decodes at
     kv_pts], and returning the axes alongside keeps simulate()'s slicing
-    structurally aligned with the build."""
+    structurally aligned with the build. Graphs are rewritten under
+    `fusion`'s kernel-fusion rules before pricing."""
     if not len(traffic.trace):
         raise ValueError("traffic has an empty trace")
     in_pts, kv_pts = _axes(traffic)
@@ -140,17 +143,18 @@ def _graphs_and_axes(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload,
                  for S in in_pts]
               + [build_model(cfg, plan, B, seq=1, kv_len=kv, policy=policy)
                  for kv in kv_pts])
-    return graphs, in_pts, kv_pts
+    return [fuse(g, fusion) for g in graphs], in_pts, kv_pts
 
 
 def trace_graphs(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload,
-                 policy: PrecisionPolicy = DEFAULT) -> List[Graph]:
+                 policy: PrecisionPolicy = DEFAULT,
+                 fusion: FusionPolicy = SERIAL) -> List[Graph]:
     """Every symbolic graph simulate() will price for this traffic — wave
     prefills (batch=slots) and refill prefills (batch=1) at the sampled
     prompt lengths, plus decode rounds at the sampled kv points. Exposed so
     study.Study can pre-collect the GEMM shapes of a whole serve-stage grid
     into one device-axis stacked mapper search."""
-    return _graphs_and_axes(cfg, plan, traffic, policy)[0]
+    return _graphs_and_axes(cfg, plan, traffic, policy, fusion)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -252,12 +256,14 @@ class SimResult:
 def simulate(system: System, cfg: ModelConfig, plan: Plan,
              traffic: TrafficWorkload,
              evaluator: Optional[Evaluator] = None,
-             policy: PrecisionPolicy = DEFAULT) -> SimResult:
+             policy: PrecisionPolicy = DEFAULT,
+             fusion: FusionPolicy = SERIAL) -> SimResult:
     """Replay `traffic.trace` through the engine's slot scheduler, pricing
     every wave/round analytically. See the module docstring for the model.
 
-    `policy` prices every wave/round at a quantization point. The slot
-    count stays `traffic.batch` — to let a quantized KV cache raise it,
+    `policy` prices every wave/round at a quantization point; `fusion`
+    prices it at an execution-model point (fused kernels and/or
+    overlap-scheduled rounds). The slot count stays `traffic.batch` — to let a quantized KV cache raise it,
     size the TrafficWorkload with
     `slots=inference_model.max_batch(..., policy=...)` (an int8-KV policy
     budgets roughly twice the fp16 slots at equal memory; the serve-stage
@@ -277,8 +283,9 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
     ev = im._evaluator(system, evaluator)
 
     # ---- price all sampled graphs in ONE batched evaluation --------------
-    graphs, in_pts, kv_pts = _graphs_and_axes(cfg, plan, traffic, policy)
-    costs = ev.evaluate_many(graphs)
+    graphs, in_pts, kv_pts = _graphs_and_axes(cfg, plan, traffic, policy,
+                                              fusion)
+    costs = ev.evaluate_many(graphs, overlap=fusion.overlap)
     k = len(in_pts)
     wave_tbl = _Interp(in_pts, costs[:k])            # batch=slots prefill
     one_tbl = _Interp(in_pts, costs[k:2 * k])        # batch=1 refill prefill

@@ -34,9 +34,11 @@ from . import area as area_mod
 from . import cost as cost_mod
 from . import inference_model as im
 from .evaluator import Evaluator
+from .fusion import FusionPolicy, fuse, fusion_tag
+from .fusion import SERIAL as SERIAL_FUSION
 from .graph import Plan, build_layer, build_model
 from .hardware import Device, System
-from .ir import Graph, MatmulSpec
+from .ir import FusedMatmulSpec, Graph, MatmulSpec
 from .mapper import is_memoized, matmul_perf_batch_multi
 from .precision import DEFAULT, PrecisionPolicy, policy_tag
 from . import simulator as sim_mod
@@ -62,8 +64,10 @@ class Case:
     widths and compute rates on every graph this case builds, and prices the
     memory-fit gate at quantized weight/KV footprints. (Not to be confused
     with TrafficWorkload.policy, the scheduler policy string.)
-    `policy_label` names the grid-axis point in result rows (defaults to the
-    preset name / structural tag)."""
+    `fusion` is the execution-model axis (ISSUE 5): which kernel-fusion
+    rewrites apply and whether latency is the overlap-scheduled makespan or
+    the serial sum. `policy_label` / `fusion_label` name the grid-axis
+    points in result rows (default to the preset name / structural tag)."""
     system: System
     cfg: ModelConfig
     plan: Plan
@@ -72,6 +76,8 @@ class Case:
     label: str = ""
     policy: PrecisionPolicy = DEFAULT
     policy_label: str = ""
+    fusion: FusionPolicy = SERIAL_FUSION
+    fusion_label: str = ""
 
     def __post_init__(self):
         if self.stage not in STAGES:
@@ -81,6 +87,9 @@ class Case:
                 f"Case.policy must be a precision.PrecisionPolicy, got "
                 f"{self.policy!r} — the scheduler policy string "
                 f"('continuous'/'static') belongs on the TrafficWorkload")
+        if not isinstance(self.fusion, FusionPolicy):
+            raise TypeError(f"Case.fusion must be a fusion.FusionPolicy, "
+                            f"got {self.fusion!r}")
         if self.stage == "serve" and not isinstance(self.workload,
                                                     TrafficWorkload):
             raise ValueError("stage='serve' needs a TrafficWorkload "
@@ -91,6 +100,11 @@ class Case:
         """Row name of this case's precision point: the grid-axis label when
         one was given, else the preset name / structural tag."""
         return self.policy_label or policy_tag(self.policy)
+
+    @property
+    def fusion_tag(self) -> str:
+        """Row name of this case's execution-model point."""
+        return self.fusion_label or fusion_tag(self.fusion)
 
 
 @dataclass(frozen=True)
@@ -123,8 +137,9 @@ class CaseResult:
             "n_devices": c.system.device_count,
             "model": c.cfg.name,
             "policy": c.policy_tag,
+            "fusion": c.fusion_tag,
             "tp": c.plan.tp, "pp": c.plan.pp, "dp": c.plan.dp,
-            "ep": c.plan.ep,
+            "ep": c.plan.ep, "sp": c.plan.sequence_parallel,
             "batch": w.batch, "in_len": w.in_len, "out_len": w.out_len,
             "latency_s": self.latency,
             "throughput_tok_s": self.throughput,
@@ -210,13 +225,18 @@ class StudyResult:
         """Select rows by case attributes: device (name), model (cfg name),
         system, plan, workload, stage, label, policy (a PrecisionPolicy, or
         a string matching the row's policy tag — the grid-axis key / preset
-        name / structural tag shown in to_rows()), batch, in_len, out_len."""
+        name / structural tag shown in to_rows()), fusion (a FusionPolicy
+        or its tag string), batch, in_len, out_len."""
         def matches(r: CaseResult, key: str, v) -> bool:
             c = r.case
             if key == "policy":
                 if isinstance(v, str):
                     return v in (c.policy_tag, policy_tag(c.policy))
                 return c.policy == v
+            if key == "fusion":
+                if isinstance(v, str):
+                    return v in (c.fusion_tag, fusion_tag(c.fusion))
+                return c.fusion == v
             try:
                 return v == {
                     "device": c.system.device.name,
@@ -271,6 +291,8 @@ class Study:
                                   Sequence[Workload], None] = None,
                  policies: Union[Mapping[str, PrecisionPolicy],
                                  Sequence[PrecisionPolicy], None] = None,
+                 fusions: Union[Mapping[str, FusionPolicy],
+                                Sequence[FusionPolicy], None] = None,
                  cases: Optional[Iterable[Case]] = None,
                  stage: str = "generate",
                  enforce_fits: bool = True,
@@ -278,7 +300,8 @@ class Study:
                  ) -> None:
         if cases is not None:
             if any(x is not None for x in (systems, configs, workloads,
-                                           policies)) or plans is not None:
+                                           policies, fusions)) \
+                    or plans is not None:
                 raise ValueError("pass either an explicit case list OR grid "
                                  "axes, not both")
             self.cases = list(cases)
@@ -286,16 +309,17 @@ class Study:
             if not systems or not configs or not workloads:
                 raise ValueError("a grid Study needs systems, configs and "
                                  "workloads (plans default to [Plan()], "
-                                 "policies to [precision.DEFAULT])")
+                                 "policies to [precision.DEFAULT], fusions "
+                                 "to [fusion.SERIAL])")
             self.cases = self._expand(systems, configs, plans, workloads,
-                                      policies, stage)
+                                      policies, fusions, stage)
         self.enforce_fits = enforce_fits
         self._evaluators: Dict[System, Evaluator] = \
             dict(evaluators) if evaluators else {}
         self._prices: Dict[tuple, tuple] = {}   # (device, link_bw) -> price
 
     @staticmethod
-    def _expand(systems, configs, plans, workloads, policies,
+    def _expand(systems, configs, plans, workloads, policies, fusions,
                 stage) -> List[Case]:
         if isinstance(workloads, Mapping):
             wl_items = list(workloads.items())
@@ -307,6 +331,12 @@ class Study:
             pol_items = list(policies.items())    # keys name the row points
         else:
             pol_items = [("", p) for p in policies]
+        if fusions is None:
+            fus_items = [("", SERIAL_FUSION)]
+        elif isinstance(fusions, Mapping):
+            fus_items = list(fusions.items())
+        else:
+            fus_items = [("", f) for f in fusions]
         if plans is None:
             plans = [Plan()]
         elif plans != "auto":
@@ -321,10 +351,14 @@ class Study:
                     plan_list = plans
                 for plan in plan_list:
                     for pname, pol in pol_items:
-                        for label, w in wl_items:
-                            out.append(Case(system, cfg, plan, w,
-                                            stage=stage, label=label,
-                                            policy=pol, policy_label=pname))
+                        for fname, fus in fus_items:
+                            for label, w in wl_items:
+                                out.append(Case(system, cfg, plan, w,
+                                                stage=stage, label=label,
+                                                policy=pol,
+                                                policy_label=pname,
+                                                fusion=fus,
+                                                fusion_label=fname))
         return out
 
     # ------------------------------------------------------------------
@@ -338,23 +372,28 @@ class Study:
     @staticmethod
     def _graphs(case: Case) -> List[Graph]:
         """The symbolic graphs this case will evaluate (for shape pre-pass
-        AND, for the layer stage, the evaluation itself)."""
+        AND, for the layer stage, the evaluation itself), already rewritten
+        under the case's fusion policy so the pre-pass collects the fused
+        GEMM shapes the evaluation will actually solve."""
         w, cfg, plan, pol = case.workload, case.cfg, case.plan, case.policy
+        fus = case.fusion
         if case.stage == "generate":
             graphs, _ = im.generate_graphs(cfg, plan, w.batch, w.in_len,
-                                           w.out_len, w.samples, pol)
+                                           w.out_len, w.samples, pol, fus)
             return graphs
         if case.stage == "prefill":
-            return [build_model(cfg, plan, w.batch, w.in_len,
-                                kv_len=w.in_len, policy=pol)]
+            return [fuse(build_model(cfg, plan, w.batch, w.in_len,
+                                     kv_len=w.in_len, policy=pol), fus)]
         if case.stage == "decode":
-            return [build_model(cfg, plan, w.batch, seq=1,
-                                kv_len=w.total_len, policy=pol)]
+            return [fuse(build_model(cfg, plan, w.batch, seq=1,
+                                     kv_len=w.total_len, policy=pol), fus)]
         if case.stage == "serve":
-            return sim_mod.trace_graphs(cfg, plan, w, pol)
+            return sim_mod.trace_graphs(cfg, plan, w, pol, fus)
         # layer: single-layer prefill + decode microbenchmark graphs
-        return [build_layer(cfg, plan, 0, w.batch, w.in_len, w.in_len, pol),
-                build_layer(cfg, plan, 0, w.batch, 1, w.total_len, pol)]
+        return [fuse(build_layer(cfg, plan, 0, w.batch, w.in_len, w.in_len,
+                                 pol), fus),
+                fuse(build_layer(cfg, plan, 0, w.batch, 1, w.total_len,
+                                 pol), fus)]
 
     def _price(self, system: System) -> tuple:
         """(area_mm2, device_cost_usd) — computed once per distinct device
@@ -401,6 +440,8 @@ class Study:
             for g in self._graphs(case):
                 for node in g:
                     s = node.spec
+                    if isinstance(s, FusedMatmulSpec):
+                        s = s.gemm     # presolve the fused kernel's GEMM
                     if not isinstance(s, MatmulSpec):
                         continue
                     pair = (dev, s.shape)
@@ -435,39 +476,41 @@ class Study:
                   price_a: float, price_c: float,
                   sys_cost: float) -> CaseResult:
         w, cfg, plan, system = case.workload, case.cfg, case.plan, case.system
-        pol = case.policy
+        pol, fus = case.policy, case.fusion
         dec_dom = "n/a"
         sim = None
         if case.stage == "serve":
             sim = sim_mod.simulate(system, cfg, plan, w, evaluator=ev,
-                                   policy=pol)
+                                   policy=pol, fusion=fus)
             latency = sim.e2e(50)           # median request e2e
             thr = sim.goodput
             pf, dc = sim.prefill_busy, sim.decode_busy
             dom, flops, bytes_ = sim.dominant, sim.flops, sim.bytes
         elif case.stage == "generate":
             rep = im.generate(system, cfg, plan, w.batch, w.in_len, w.out_len,
-                              samples=w.samples, evaluator=ev, policy=pol)
+                              samples=w.samples, evaluator=ev, policy=pol,
+                              fusion=fus)
             latency = rep.latency
             thr = im.throughput_from_generate(rep, plan, w.batch, w.out_len)
             pf, dc = rep.breakdown["prefill"], rep.breakdown["decode"]
             dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
         elif case.stage == "prefill":
             rep = im.prefill(system, cfg, plan, w.batch, w.in_len,
-                             evaluator=ev, policy=pol)
+                             evaluator=ev, policy=pol, fusion=fus)
             latency = pf = rep.latency
             dc = 0.0
             thr = w.tokens_in * plan.dp * plan.pp / latency
             dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
         elif case.stage == "decode":
             rep = im.decode_step(system, cfg, plan, w.batch, w.total_len,
-                                 evaluator=ev, policy=pol)
+                                 evaluator=ev, policy=pol, fusion=fus)
             latency = dc = rep.latency
             pf = 0.0
             thr = w.batch * plan.dp * plan.pp / latency
             dom, flops, bytes_ = rep.dominant, rep.flops, rep.bytes
         else:   # layer microbenchmark: prefill + decode single-layer graphs
-            pf_c, dc_c = ev.evaluate_many(self._graphs(case))
+            pf_c, dc_c = ev.evaluate_many(self._graphs(case),
+                                          overlap=fus.overlap)
             latency = pf = pf_c.latency
             dc = dc_c.latency
             thr = 0.0

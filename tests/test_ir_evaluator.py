@@ -172,12 +172,17 @@ def test_rank_plans_matches_frozen_seed_commit():
     ref = json.load(open(_REF_PATH))["rank_plans/stablelm-1.6b/tpu_v5e_16"]
     got = planner.rank_plans(hw.tpu_v5e_pod(16), get_config("stablelm-1.6b"),
                              8, 1024, 128)
+    checked = 0
     for r in got:
-        if not r.fits:
+        if not r.fits or r.plan.sequence_parallel:
+            # SP siblings postdate the frozen reference (ISSUE 5); their
+            # non-SP twins must still match it bit-for-bit
             continue
         lat, tp_ = ref[f"tp{r.plan.tp}_pp{r.plan.pp}_dp{r.plan.dp}"]
         assert _rel(r.latency, lat) < REL, r.plan
         assert _rel(r.throughput, tp_) < REL, r.plan
+        checked += 1
+    assert checked > 0
 
 
 # ---------------------------------------------------------------------------
