@@ -15,6 +15,7 @@ import time
 
 from repro.core import hardware as hw
 from repro.core import planner
+from repro.core import result_cache
 from repro.core.evaluator import Evaluator
 from repro.core.mapper import clear_matmul_cache
 from repro.configs import ARCHS
@@ -47,19 +48,20 @@ def _sweep(node, evaluator, quiet: bool = False) -> dict:
 def run() -> dict:
     node = hw.tpu_v5e_pod(16)      # 4x4 v5e slice for planning demo
 
-    # ---- new path: shared dedup evaluator + batched mapper ----------------
-    clear_matmul_cache()
-    ev = Evaluator(node)
-    t0 = time.perf_counter()
-    out = _sweep(node, ev)
-    dt = time.perf_counter() - t0
+    with result_cache.disabled():   # honest engine-vs-seed timing, no disk
+        # ---- new path: shared dedup evaluator + batched mapper -----------
+        clear_matmul_cache()
+        ev = Evaluator(node)
+        t0 = time.perf_counter()
+        out = _sweep(node, ev)
+        dt = time.perf_counter() - t0
 
-    # ---- seed path: dense per-shape search, no batching -------------------
-    clear_matmul_cache()
-    t0 = time.perf_counter()
-    _sweep(node, Evaluator(node, use_reference_mapper=True), quiet=True)
-    dt_seed = time.perf_counter() - t0
-    clear_matmul_cache()
+        # ---- seed path: dense per-shape search, no batching --------------
+        clear_matmul_cache()
+        t0 = time.perf_counter()
+        _sweep(node, Evaluator(node, use_reference_mapper=True), quiet=True)
+        dt_seed = time.perf_counter() - t0
+        clear_matmul_cache()
 
     emit("planner/sweep_wallclock", dt * 1e6,
          f"seconds={dt:.1f};seed_path_seconds={dt_seed:.1f};"

@@ -7,10 +7,16 @@ check fails.
 ``--quick`` runs a reduced smoke subset (fast modules + a shrunken
 study_speed grid) so sweep regressions fail in CI rather than only in full
 paper reproductions.
+
+``--json out.json`` additionally writes a machine-readable report (per-bench
+wall-clock seconds + every CHECKS key/ratio) so the perf trajectory is
+tracked across PRs — CI emits BENCH_quick.json from the smoke run.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -19,6 +25,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI smoke subset")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a machine-readable BENCH_*.json report "
+                         "(per-bench seconds + checks) to PATH")
     args = ap.parse_args(argv)
 
     from . import (fig5_operators, fig6_area, table3_compute_designs,
@@ -56,11 +65,13 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     failed = []
     all_checks = {}
+    timings = {}
     for name, mod, kw in modules:
         t0 = time.perf_counter()
         checks = mod.run(**kw)
         dt = time.perf_counter() - t0
         all_checks[name] = checks
+        timings[name] = dt
         bad = [k for k, v in checks.items()
                if isinstance(v, bool) and not v]
         status = "PASS" if not bad else f"FAIL({','.join(bad)})"
@@ -72,6 +83,22 @@ def main(argv=None) -> None:
     for name, checks in all_checks.items():
         for k, v in checks.items():
             print(f"# {name}.{k} = {v}")
+    if args.json:
+        report = {
+            "suite": "quick" if args.quick else "full",
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "passed": not failed,
+            "benchmarks": {
+                name: {"seconds": round(timings[name], 4),
+                       "checks": all_checks[name]}
+                for name in timings
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -15,13 +15,21 @@ A 5-design x 2-model x 3-workload grid (30 generate cases) is run three ways:
 
 Every CaseResult latency must match both baselines bit-for-bit; the
 wall-clock ratios and cache statistics are the acceptance numbers.
+
+ISSUE 6 adds the warm-rerun measurement: the same grid run again against the
+persistent CaseResult cache (private temp dir) must be >= 10x faster than the
+cold run (>= 5x in --quick's shrunken grid, where fixed overhead dominates)
+and bit-identical — the regression threshold is a hard claim check, so a
+cache-layer slowdown fails CI.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 from repro.core import hardware as hw
 from repro.core import inference_model as im
+from repro.core import result_cache
 from repro.core.evaluator import Evaluator
 from repro.core.graph import Plan
 from repro.core.mapper import clear_matmul_cache
@@ -59,33 +67,57 @@ def _generate(case, evaluator):
 def run(quick: bool = False) -> dict:
     cases = _cases(quick)
 
-    # ---- Study path: one declarative grid ---------------------------------
-    clear_matmul_cache()
-    t0 = time.perf_counter()
-    res = Study(cases=cases, enforce_fits=False).run()
-    dt_study = time.perf_counter() - t0
+    with result_cache.disabled():       # three honest uncached timings
+        # ---- Study path: one declarative grid -----------------------------
+        clear_matmul_cache()
+        t0 = time.perf_counter()
+        res = Study(cases=cases, enforce_fits=False).run()
+        dt_study = time.perf_counter() - t0
 
-    # ---- pre-Study loop: cold default Evaluator per call, warm memo -------
-    clear_matmul_cache()
-    t0 = time.perf_counter()
-    loop = [_generate(c, Evaluator(c.system)) for c in cases]
-    dt_loop = time.perf_counter() - t0
+        # ---- pre-Study loop: cold default Evaluator per call, warm memo ---
+        clear_matmul_cache()
+        t0 = time.perf_counter()
+        loop = [_generate(c, Evaluator(c.system)) for c in cases]
+        dt_loop = time.perf_counter() - t0
 
-    # ---- seed path: per-shape dense-search Evaluator per case -------------
-    t0 = time.perf_counter()
-    seed = [_generate(c, Evaluator(c.system, use_reference_mapper=True))
-            for c in cases]
-    dt_seed = time.perf_counter() - t0
-    clear_matmul_cache()
+        # ---- seed path: per-shape dense-search Evaluator per case ---------
+        t0 = time.perf_counter()
+        seed = [_generate(c, Evaluator(c.system, use_reference_mapper=True))
+                for c in cases]
+        dt_seed = time.perf_counter() - t0
+        clear_matmul_cache()
 
-    exact = all(r.latency == a.latency == b.latency
-                for r, a, b in zip(res, loop, seed))
+    # ---- persistent layer: cold grid, then warm rerun (ISSUE 6) -----------
+    with tempfile.TemporaryDirectory(prefix="repro-bench-cache-") as tmp:
+        with result_cache.overridden(root=tmp, enabled=True):
+            clear_matmul_cache()
+            t0 = time.perf_counter()
+            cold = Study(cases=cases, enforce_fits=False).run()
+            dt_cold = time.perf_counter() - t0
+            clear_matmul_cache()        # warm rerun = a fresh process
+            t0 = time.perf_counter()
+            warm = Study(cases=cases, enforce_fits=False).run()
+            dt_warm = time.perf_counter() - t0
+            clear_matmul_cache(disk=True)
+    warm_speedup = dt_cold / max(dt_warm, 1e-9)
+    warm_exact = all(c.latency == w.latency and c.throughput == w.throughput
+                     for c, w in zip(cold, warm))
+    # quick's shrunken grid carries relatively more fixed overhead — the
+    # asserted floor drops to 5x there; the acceptance claim is the full 10x
+    warm_floor = 5.0 if quick else 10.0
+
+    exact = all(r.latency == a.latency == b.latency == c.latency
+                for r, a, b, c in zip(res, loop, seed, cold))
     speedup_loop = dt_loop / max(dt_study, 1e-9)
     speedup_seed = dt_seed / max(dt_study, 1e-9)
     emit("study_speed/grid", dt_study * 1e6,
          f"cases={len(cases)};study_s={dt_study:.2f};loop_s={dt_loop:.2f};"
          f"seed_s={dt_seed:.2f};vs_loop={speedup_loop:.1f}x;"
          f"vs_seed={speedup_seed:.1f}x")
+    emit("study_speed/warm_rerun", dt_warm * 1e6,
+         f"cold_s={dt_cold:.2f};warm_s={dt_warm:.4f};"
+         f"speedup={warm_speedup:.0f}x;"
+         f"case_hits={warm.stats.case_cache_hits}")
     emit("study_speed/study_stats", 0.0,
          res.stats.summary().replace(" ", ";"))
     for system, ev in res.evaluators.items():
@@ -101,6 +133,9 @@ def run(quick: bool = False) -> dict:
         "unique_matmul_pairs": res.stats.matmul_pairs_presolved,
         "bitwise_equal_to_both_baselines": exact,
         "faster_than_seed_loop": dt_seed > dt_study,
+        "warm_rerun_speedup_x": round(warm_speedup, 1),
+        "warm_rerun_bitwise_equal": warm_exact,
+        "warm_rerun_fast_enough": warm_speedup >= warm_floor,
     }
 
 

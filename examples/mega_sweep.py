@@ -1,0 +1,91 @@
+"""The ISSUE 6 acceptance demo: a 10^5-case Study on one box.
+
+Declares a systems x models x plans x workloads grid whose workload axis is
+densely sampled (batch x input length x output length), runs it cold, then
+reruns it warm from the persistent CaseResult cache and spot-checks
+bit-identity against a fully uncached evaluation of a sample of cases.
+
+    PYTHONPATH=src python examples/mega_sweep.py                 # 10^5 cases
+    PYTHONPATH=src python examples/mega_sweep.py --cases 2000    # smoke
+
+The cold run streams every unique (device, GEMM shape) pair of the whole
+grid through one stacked mapper search; the warm rerun re-prices nothing.
+Point REPRO_CACHE_DIR somewhere fast if ~/.cache is networked.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import hardware as hw
+from repro.core import result_cache
+from repro.core.graph import Plan
+from repro.core.mapper import clear_matmul_cache
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
+from repro.configs import get_config
+
+
+def build_cases(n_target: int):
+    """systems x models x plans x (batch x in_len x out_len) ≈ n_target."""
+    systems = [hw.make_system(hw.compute_design(d), 4, 600, "fc")
+               for d in "ABCDE"]
+    models = [get_config("qwen2-0.5b"), get_config("qwen3-1.7b")]
+    plans = [Plan(tp=1, dp=4), Plan(tp=4)]
+    fixed = len(systems) * len(models) * len(plans)
+
+    batches = (1, 2, 4, 8, 16, 32)
+    outs = (16, 64, 256)
+    n_inputs = max(1, n_target // (fixed * len(batches) * len(outs)))
+    in_lens = [64 + 32 * i for i in range(n_inputs)]
+
+    cases = [Case(s, m, p, Workload(b, i, o),
+                  label=f"{s.device.name}/{m.name}/b{b}i{i}o{o}")
+             for s in systems for m in models for p in plans
+             for b in batches for i in in_lens for o in outs]
+    return cases
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cases", type=int, default=100_000)
+    ap.add_argument("--verify-sample", type=int, default=8,
+                    help="cases re-evaluated uncached for bit-identity")
+    args = ap.parse_args(argv)
+
+    cases = build_cases(args.cases)
+    print(f"grid: {len(cases)} cases")
+
+    clear_matmul_cache()
+    t0 = time.perf_counter()
+    cold = Study(cases=cases, enforce_fits=False).run()
+    dt_cold = time.perf_counter() - t0
+    print(f"cold: {dt_cold:.1f}s "
+          f"({1e3 * dt_cold / len(cases):.2f} ms/case)  "
+          f"[{cold.stats.summary()}]")
+
+    clear_matmul_cache()                    # warm rerun = a fresh process
+    t0 = time.perf_counter()
+    warm = Study(cases=cases, enforce_fits=False).run()
+    dt_warm = time.perf_counter() - t0
+    print(f"warm: {dt_warm:.2f}s — {dt_cold / max(dt_warm, 1e-9):.0f}x "
+          f"(case hits: {warm.stats.case_cache_hits})")
+
+    assert all(c.latency == w.latency and c.throughput == w.throughput
+               for c, w in zip(cold, warm)), "warm rerun diverged"
+
+    # bit-identity vs the uncached path on an evenly-spaced sample
+    step = max(1, len(cases) // args.verify_sample)
+    sample = cases[::step][:args.verify_sample]
+    clear_matmul_cache()
+    with result_cache.disabled():
+        ref = Study(cases=sample, enforce_fits=False).run()
+    ok = all(a.latency == b.latency for a, b in zip(ref, cold[::step]))
+    print(f"uncached spot-check ({len(sample)} cases): "
+          f"{'bit-identical' if ok else 'MISMATCH'}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,7 @@ from . import interconnect as net
 from .ir import (CollectiveSpec, ElementwiseSpec, FusedMatmulSpec, Graph,
                  MatmulSpec, NormSpec, OpSpec, ScanSpec, SoftmaxSpec,
                  TrafficSpec, resource_of)
-from .mapper import matmul_perf_batch
+from .mapper import matmul_cache_stats, matmul_perf_batch
 from .schedule import schedule_graph
 
 
@@ -45,6 +45,12 @@ class EvalStats:
     candidates_searched: int = 0     # dense-equivalent candidate count
     serial_seconds: float = 0.0      # serial sum of overlap-scheduled graphs
     scheduled_seconds: float = 0.0   # their resource-timeline makespans
+    # mapper memo deltas attributable to this evaluator (ISSUE 6): shapes
+    # served by the in-memory LRU / the persistent disk layer instead of a
+    # search, and LRU entries evicted while it ran
+    mapper_memo_hits: int = 0
+    mapper_disk_hits: int = 0
+    mapper_evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -66,6 +72,9 @@ class EvalStats:
                 f"matmul_searches={self.matmul_searches} "
                 f"batched_calls={self.batched_searches} "
                 f"candidates={self.candidates_searched} "
+                f"mapper_memo_hits={self.mapper_memo_hits} "
+                f"mapper_disk_hits={self.mapper_disk_hits} "
+                f"mapper_evictions={self.mapper_evictions} "
                 f"sched_vs_serial={self.schedule_ratio:.3f}")
 
 
@@ -93,6 +102,17 @@ class Evaluator:
         self.stats = EvalStats()
 
     # ------------------------------------------------------------------
+    def _mapper_call(self, shapes):
+        """matmul_perf_batch with the global memo's hit/eviction deltas
+        attributed to this evaluator's stats (ISSUE 6)."""
+        ms = matmul_cache_stats()
+        memo0, disk0, evict0 = ms.memo_hits, ms.disk_hits, ms.evictions
+        results = matmul_perf_batch(self.device, shapes)
+        self.stats.mapper_memo_hits += ms.memo_hits - memo0
+        self.stats.mapper_disk_hits += ms.disk_hits - disk0
+        self.stats.mapper_evictions += ms.evictions - evict0
+        return results
+
     def _eval_spec(self, spec: OpSpec) -> ops.OpResult:
         """Evaluate one spec eagerly through the operator models."""
         dev = self.device
@@ -107,7 +127,7 @@ class Evaluator:
                                           spec.mac_scale)
             else:
                 self.stats.batched_searches += 1
-                r = matmul_perf_batch(dev, [spec.shape])[0]
+                r = self._mapper_call([spec.shape])[0]
             self.stats.candidates_searched += r.candidates_searched
             return ops.OpResult("matmul", r.latency
                                 + dev.kernel_launch_overhead_s, r.flops,
@@ -197,7 +217,7 @@ class Evaluator:
         if not pending:
             return seen
         dev = self.device
-        results = matmul_perf_batch(dev, [s.shape for s in pending])
+        results = self._mapper_call([s.shape for s in pending])
         self.stats.batched_searches += 1
         for s, r in zip(pending, results):
             self.stats.matmul_searches += 1

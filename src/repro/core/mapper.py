@@ -29,15 +29,34 @@ count, frequency, buffer port widths, memory bandwidth) is gathered per
 candidate row exactly like the shape scalars, so one broadcast solves
 (device, shape) pairs across a whole design-space Study. Per-device results
 are bit-identical to the single-device path (tests/test_study.py).
+
+Backends (ISSUE 6): the chunk evaluation is split into a gather step
+(`_gather_chunk`), a candidate-table computation, and a winner pick
+(`_pick_winners`). The table computation has two interchangeable backends —
+the default numpy broadcast (`_chunk_tables_numpy`) and a jitted JAX kernel
+(`core/mapper_jax.py`) that pads chunks into power-of-two buckets so a
+handful of traces serve every chunk shape. Select with
+`set_mapper_backend("jax")` or REPRO_MAPPER_BACKEND=jax; winners are
+backend-equivalent (tests/test_mapper_jax.py), latencies agree to float64
+round-off (XLA may contract a*b+c to FMA).
+
+Results persist (ISSUE 6): the in-memory (device, shape) memo is a bounded
+LRU backed by a content-hashed on-disk cache (core/result_cache.py) keyed by
+sha256(model-version salt, backend, Device, MatmulShape) — a new process
+re-reads previous sessions' searches instead of re-solving them.
 """
 from __future__ import annotations
 
+import os
+import warnings
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .hardware import Device
+from .result_cache import MODEL_VERSION, DiskCache, content_key
 from .systolic import gemm_cycles_array
 
 
@@ -146,35 +165,22 @@ def _candidate_rows(dev: Device, shape: MatmulShape):
     return cols, p_ok, n_dense
 
 
-def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
-                 rows: Sequence, p_oks: Sequence) -> List[Tuple]:
-    """Evaluate the concatenated feasible candidates of several (device,
-    shape) pairs in one broadcast and pick each pair's winner. Returns
-    per-pair winner tuples. `devs[i]` is the device of `shapes[i]`."""
+def _gather_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
+                  rows: Sequence, p_oks: Sequence) -> Dict:
+    """Concatenate the feasible candidates of several (device, shape) pairs
+    into flat per-row arrays — the backend-independent input of the chunk
+    evaluation. Device and shape scalars are gathered per candidate row;
+    uniform device scalars collapse to python scalars so the single-device
+    path stays cheap (bit-identical either way: numpy broadcasting of an
+    equal-valued array)."""
     counts = [r[0].size for r in rows]
     offs = np.concatenate([[0], np.cumsum(counts)])
 
-    # per-row gathered device scalars; collapse to a python scalar when every
-    # pair targets the same device so the single-device path stays cheap
-    # (bit-identical either way: numpy broadcasting of an equal-valued array)
     def dscal(vals, dtype=np.int64):
         if len(set(vals)) == 1:
             return vals[0]
         return np.concatenate([np.full(c, v, dtype=dtype)
                                for c, v in zip(counts, vals)])
-
-    sa_rows = dscal([d.core.lane.systolic_array.rows for d in devs])
-    sa_cols = dscal([d.core.lane.systolic_array.cols for d in devs])
-    lanes = dscal([d.core.lanes for d in devs])
-    freq = dscal([d.frequency_hz for d in devs], dtype=np.float64)
-    cores = dscal([d.core_count for d in devs])
-    gb_bw_cyc = dscal([d.global_buffer_bw_per_cycle for d in devs])
-    mem_bw = dscal([d.memory_bandwidth for d in devs], dtype=np.float64)
-    vec_tp = dscal([d.core.lanes * d.core.lane.vector_unit.width
-                    for d in devs])
-    TM_, TK_, TN_, SM_, SK_, SN_ = (
-        np.concatenate([r[j] for r in rows]) for j in range(6))
-    P_OK = np.concatenate(p_oks, axis=0) if p_oks else np.zeros((0, 4), bool)
 
     # per-row gathered shape scalars (byte widths promote to float64 only
     # when a sub-byte width appears, keeping the default path on exact int64)
@@ -184,12 +190,50 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
             dtype = np.float64
         return np.concatenate([np.full(c, v, dtype=dtype)
                                for c, v in zip(counts, vals)])
-    m_v, k_v, n_v = scal(0), scal(1), scal(2)
-    batch_v = scal(3)
-    bytes_a_v, bytes_b_v = scal(4), scal(5)
-    bytes_out_v, bytes_acc_v = scal(6), scal(7)
-    bshared_v = scal(8, dtype=bool)
-    mac_scale_v = scal(9, dtype=np.float64)
+
+    tm, tk, tn, sm, sk, sn = (np.concatenate([r[j] for r in rows])
+                              for j in range(6))
+    return {
+        "counts": counts, "offs": offs,
+        "tm": tm, "tk": tk, "tn": tn, "sm": sm, "sk": sk, "sn": sn,
+        "p_ok": (np.concatenate(p_oks, axis=0) if p_oks
+                 else np.zeros((0, 4), bool)),
+        "sa_rows": dscal([d.core.lane.systolic_array.rows for d in devs]),
+        "sa_cols": dscal([d.core.lane.systolic_array.cols for d in devs]),
+        "lanes": dscal([d.core.lanes for d in devs]),
+        "freq": dscal([d.frequency_hz for d in devs], dtype=np.float64),
+        "cores": dscal([d.core_count for d in devs]),
+        "gb_bw_cyc": dscal([d.global_buffer_bw_per_cycle for d in devs]),
+        "mem_bw": dscal([d.memory_bandwidth for d in devs],
+                        dtype=np.float64),
+        "vec_tp": dscal([d.core.lanes * d.core.lane.vector_unit.width
+                         for d in devs]),
+        "m": scal(0), "k": scal(1), "n": scal(2), "batch": scal(3),
+        "bytes_a": scal(4), "bytes_b": scal(5),
+        "bytes_out": scal(6), "bytes_acc": scal(7),
+        "b_shared": scal(8, dtype=bool),
+        "mac_scale": scal(9, dtype=np.float64),
+    }
+
+
+def _chunk_tables_numpy(g: Dict) -> Dict:
+    """The numpy backend: evaluate every candidate row of a gathered chunk.
+
+    Returns the per-row tables the winner pick reads: `totals` [rows, p]
+    (np.inf where the pipeline option is infeasible), `use_s2` / `tile_time`
+    [rows, db1], and the level-2 step/traffic columns. core/mapper_jax.py
+    computes the same tables with one jitted XLA kernel.
+    """
+    TM_, TK_, TN_ = g["tm"], g["tk"], g["tn"]
+    SM_, SK_, SN_ = g["sm"], g["sk"], g["sn"]
+    P_OK = g["p_ok"]
+    sa_rows, sa_cols, lanes = g["sa_rows"], g["sa_cols"], g["lanes"]
+    freq, cores, gb_bw_cyc = g["freq"], g["cores"], g["gb_bw_cyc"]
+    mem_bw, vec_tp = g["mem_bw"], g["vec_tp"]
+    m_v, k_v, n_v, batch_v = g["m"], g["k"], g["n"], g["batch"]
+    bytes_a_v, bytes_b_v = g["bytes_a"], g["bytes_b"]
+    bytes_out_v, bytes_acc_v = g["bytes_out"], g["bytes_acc"]
+    bshared_v, mac_scale_v = g["b_shared"], g["mac_scale"]
 
     # ---------------- level 0: core compute time for one subtile ----------
     sn_lane = -(-SN_ // lanes)           # ceil: subtile split across lanes
@@ -261,6 +305,25 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
             tot = steps * (step_mem_t + tt) + c_total_t
         totals[:, p] = np.where(P_OK[:, p], tot, np.inf)
 
+    return {"totals": totals,
+            "use_s2": np.stack(use_s2, axis=1),
+            "tile_time": np.stack(tile_time, axis=1),
+            "steps": steps, "step_mem_t": step_mem_t,
+            "c_total_t": c_total_t,
+            "n_t_m": n_t_m, "n_t_n": n_t_n, "n_t_k": n_t_k}
+
+
+def _pick_winners(g: Dict, t: Dict, devs: Sequence[Device],
+                  shapes: Sequence[MatmulShape]) -> List[Tuple]:
+    """Select each pair's best candidate from the chunk tables (backend-
+    independent: pure numpy over the returned tables)."""
+    offs = g["offs"]
+    TM_, TK_, TN_ = g["tm"], g["tk"], g["tn"]
+    SM_, SK_, SN_ = g["sm"], g["sk"], g["sn"]
+    totals, use_s2, tile_time = t["totals"], t["use_s2"], t["tile_time"]
+    steps, step_mem_t, c_total_t = t["steps"], t["step_mem_t"], t["c_total_t"]
+    n_t_m, n_t_n, n_t_k = t["n_t_m"], t["n_t_n"], t["n_t_k"]
+
     out = []
     for s, shape in enumerate(shapes):
         lo, hi = int(offs[s]), int(offs[s + 1])
@@ -283,14 +346,42 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
             tile_m=int(TM_[row]), tile_k=int(TK_[row]), tile_n=int(TN_[row]),
             subtile_m=int(SM_[row]), subtile_k=int(SK_[row]),
             subtile_n=int(SN_[row]),
-            scheme=2 if bool(use_s2[db1][row]) else 1,
+            scheme=2 if bool(use_s2[row, db1]) else 1,
             double_buffer_l2=bool(db2), double_buffer_l1=bool(db1),
-            compute_time=float(steps[row] * tile_time[db1][row]),
+            compute_time=float(steps[row] * tile_time[row, db1]),
             memory_time=float(steps[row] * step_mem_t[row] + c_total_t[row]),
         )
         out.append((float(totals[row, p]), 2 * batch * m * k * n, mm_bytes,
                     mapping))
     return out
+
+
+def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
+                 rows: Sequence, p_oks: Sequence) -> List[Tuple]:
+    """Evaluate the concatenated feasible candidates of several (device,
+    shape) pairs in one broadcast and pick each pair's winner. Returns
+    per-pair winner tuples. `devs[i]` is the device of `shapes[i]`."""
+    g = _gather_chunk(devs, shapes, rows, p_oks)
+    if _BACKEND == "jax":
+        tables = _jax_tables(g)
+    else:
+        tables = _chunk_tables_numpy(g)
+    return _pick_winners(g, tables, devs, shapes)
+
+
+def _jax_tables(g: Dict) -> Dict:
+    """Dispatch to the JAX backend, falling back to numpy (once, loudly)
+    when jax is unavailable in this environment."""
+    global _BACKEND
+    try:
+        from . import mapper_jax
+    except Exception as e:        # jax missing or broken: degrade, keep going
+        warnings.warn(f"mapper backend 'jax' unavailable ({e}); "
+                      f"falling back to numpy", RuntimeWarning,
+                      stacklevel=3)
+        _BACKEND = "numpy"
+        return _chunk_tables_numpy(g)
+    return mapper_jax.chunk_tables(g)
 
 
 # candidate-row budget per broadcast chunk (~25 work arrays x 8B x rows).
@@ -300,19 +391,156 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
 # so this only moves wall-clock, never results.
 _CHUNK_ROWS = 1 << 16
 
+
+# ---------------------------------------------------------------------------
+# backend selection (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+_BACKENDS = ("numpy", "jax")
+_BACKEND = os.environ.get("REPRO_MAPPER_BACKEND", "numpy").strip().lower()
+if _BACKEND not in _BACKENDS:
+    _BACKEND = "numpy"
+
+
+def get_mapper_backend() -> str:
+    """The active chunk-evaluation backend ("numpy" | "jax")."""
+    return _BACKEND
+
+
+def set_mapper_backend(backend: str) -> str:
+    """Select the chunk-evaluation backend; returns the previous one.
+
+    "numpy" is the default (bit-for-bit the frozen seed reference); "jax"
+    pads chunks into power-of-two buckets and evaluates them with one jitted
+    XLA kernel per bucket shape (core/mapper_jax.py) — winner-equivalent,
+    latencies agree to float64 round-off. Raises ImportError immediately if
+    jax is requested but not importable."""
+    global _BACKEND
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown mapper backend {backend!r}; "
+                         f"have {_BACKENDS}")
+    if backend == "jax":
+        from . import mapper_jax        # noqa: F401  (fail fast, not mid-run)
+    prev = _BACKEND
+    _BACKEND = backend
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# result memo: bounded in-memory LRU backed by the persistent disk layer
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MapperCacheStats:
+    """Accounting for the two memo layers (evaluator snapshots the deltas
+    into EvalStats; benchmarks read it directly)."""
+    memo_hits: int = 0       # served from the in-memory LRU
+    disk_hits: int = 0       # served from the persistent layer
+    misses: int = 0          # actually searched
+    evictions: int = 0       # LRU entries dropped at capacity
+
+    def summary(self) -> str:
+        return (f"memo_hits={self.memo_hits} disk_hits={self.disk_hits} "
+                f"misses={self.misses} evictions={self.evictions}")
+
+
+_STATS = MapperCacheStats()
+
 # global (device, shape) -> MatmulResult memo shared by the single-shape and
-# batched entry points, so independent Evaluators never re-search a shape
-_MM_CACHE: dict = {}
+# batched entry points, so independent Evaluators never re-search a shape.
+# Bounded LRU: at capacity the least-recently-used entry is evicted (the
+# seed's dict silently stopped inserting instead — every later shape missed).
+_MM_CACHE: "OrderedDict[tuple, MatmulResult]" = OrderedDict()
 _MM_CACHE_MAX = 1 << 17
 
+_DISK: Optional[DiskCache] = None
 
-def clear_matmul_cache() -> None:
-    """Drop all memoized mapper results (cold-start benchmarking)."""
+
+def _disk_cache() -> DiskCache:
+    """The mapper's persistent namespace (lazy; follows result_cache's
+    global root/enabled switches at every access)."""
+    global _DISK
+    if _DISK is None:
+        _DISK = DiskCache("mapper")
+    return _DISK
+
+
+def matmul_cache_stats() -> MapperCacheStats:
+    """Live hit/miss/eviction counters of the global matmul memo."""
+    return _STATS
+
+
+def reset_matmul_cache_stats() -> None:
+    global _STATS
+    _STATS = MapperCacheStats()
+
+
+def _mm_cache_put(key: tuple, r: MatmulResult) -> None:
+    if key in _MM_CACHE:
+        _MM_CACHE.move_to_end(key)
+        _MM_CACHE[key] = r
+        return
+    while len(_MM_CACHE) >= _MM_CACHE_MAX:
+        _MM_CACHE.popitem(last=False)
+        _STATS.evictions += 1
+    _MM_CACHE[key] = r
+
+
+# canonical Device hash fragments are stable per process — memoize by the
+# (hashable, frozen) Device itself
+_DEVICE_KEYS: Dict[Device, str] = {}
+
+
+def _pair_key(device: Device, shape: MatmulShape) -> str:
+    """Content hash of one (device, shape) search under the current model
+    version and backend. The backend is part of the key: JAX latencies may
+    differ from numpy in the last float64 ulp (FMA contraction), and warm
+    reruns must be bit-identical to their own cold path."""
+    dk = _DEVICE_KEYS.get(device)
+    if dk is None:
+        dk = content_key(device, salt=MODEL_VERSION)
+        _DEVICE_KEYS[device] = dk
+    return content_key(dk, list(shape),
+                       salt=f"{MODEL_VERSION}/mapper/{_BACKEND}")
+
+
+def _result_to_doc(r: MatmulResult) -> dict:
+    mp = r.mapping
+    return {"latency": r.latency, "flops": r.flops,
+            "bytes": r.main_memory_bytes, "cands": r.candidates_searched,
+            "mapping": [mp.tile_m, mp.tile_k, mp.tile_n, mp.subtile_m,
+                        mp.subtile_k, mp.subtile_n, mp.scheme,
+                        int(mp.double_buffer_l2), int(mp.double_buffer_l1),
+                        mp.compute_time, mp.memory_time]}
+
+
+def _result_from_doc(doc: dict) -> Optional[MatmulResult]:
+    try:
+        tm, tk, tn, sm, sk, sn, scheme, db2, db1, ct, mt = doc["mapping"]
+        return MatmulResult(
+            latency=float(doc["latency"]), flops=int(doc["flops"]),
+            main_memory_bytes=int(doc["bytes"]),
+            mapping=Mapping(int(tm), int(tk), int(tn), int(sm), int(sk),
+                            int(sn), int(scheme), bool(db2), bool(db1),
+                            float(ct), float(mt)),
+            candidates_searched=int(doc["cands"]))
+    except (KeyError, TypeError, ValueError):
+        return None                     # malformed entry: treat as a miss
+
+
+def clear_matmul_cache(disk: bool = False) -> None:
+    """Drop all memoized mapper results (cold-start benchmarking).
+
+    By default only the in-memory LRU is cleared — the persistent layer
+    keeps serving across-session warmth. Pass `disk=True` to also wipe the
+    on-disk mapper namespace (honest cold-start measurement)."""
     _MM_CACHE.clear()
+    if disk:
+        _disk_cache().clear()
 
 
 def is_memoized(device: Device, shape: MatmulShape) -> bool:
-    """True if this (device, shape) pair is already in the global memo."""
+    """True if this (device, shape) pair is already in the in-memory memo."""
     return (device, shape) in _MM_CACHE
 
 
@@ -327,11 +555,16 @@ def matmul_perf_batch_multi(
     memory). A whole design-space Study (many Systems x models x workloads)
     pays the numpy dispatch overhead once per chunk instead of once per
     device per shape. Results are identical to calling matmul_perf per pair.
+
+    Lookup order per pair: in-memory LRU, then the content-hashed disk layer
+    (previous sessions' searches), then the stacked search; fresh results
+    are written through to both layers.
     """
     results: List[MatmulResult] = [None] * len(pairs)   # type: ignore
     pend_idx: List[int] = []
-    pend_rows, pend_poks, pend_dense = [], [], []
+    pend_rows, pend_poks, pend_dense, pend_keys = [], [], [], []
     budget = 0
+    disk = _disk_cache()
 
     def flush():
         nonlocal budget
@@ -340,30 +573,46 @@ def matmul_perf_batch_multi(
         solved = _solve_chunk([pairs[i][0] for i in pend_idx],
                               [pairs[i][1] for i in pend_idx],
                               pend_rows, pend_poks)
-        for i, nd, (lat, flops, mm_bytes, mapping) in zip(
-                pend_idx, pend_dense, solved):
+        for i, nd, key, (lat, flops, mm_bytes, mapping) in zip(
+                pend_idx, pend_dense, pend_keys, solved):
             r = MatmulResult(latency=lat, flops=flops,
                              main_memory_bytes=mm_bytes,
                              mapping=mapping, candidates_searched=nd)
             results[i] = r
-            if len(_MM_CACHE) < _MM_CACHE_MAX:
-                _MM_CACHE[pairs[i]] = r
+            _mm_cache_put(pairs[i], r)
+            if key is not None:
+                disk.put(key, _result_to_doc(r))
         pend_idx.clear()
         pend_rows.clear()
         pend_poks.clear()
         pend_dense.clear()
+        pend_keys.clear()
         budget = 0
 
     for i, (device, shape) in enumerate(pairs):
         hit = _MM_CACHE.get((device, shape))
         if hit is not None:
+            _MM_CACHE.move_to_end((device, shape))
+            _STATS.memo_hits += 1
             results[i] = hit
             continue
+        key = None
+        if disk.enabled:
+            key = _pair_key(device, shape)
+            doc = disk.get(key)
+            r = _result_from_doc(doc) if doc is not None else None
+            if r is not None:
+                _STATS.disk_hits += 1
+                _mm_cache_put((device, shape), r)
+                results[i] = r
+                continue
+        _STATS.misses += 1
         cols, p_ok, n_dense = _candidate_rows(device, shape)
         pend_idx.append(i)
         pend_rows.append(cols)
         pend_poks.append(p_ok)
         pend_dense.append(n_dense)
+        pend_keys.append(key)
         budget += cols[0].size
         if budget >= _CHUNK_ROWS:
             flush()

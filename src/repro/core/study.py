@@ -13,7 +13,13 @@ cross-products of Systems, ModelConfigs, Plans and Workloads (or an explicit
     cross-System analog of the per-call shapes axis,
   * prices die area and cost once per distinct device (area.py / cost.py),
   * applies the planner's memory-fit check before paying for evaluation
-    (`enforce_fits=False` to reproduce paper microbenchmarks regardless).
+    (`enforce_fits=False` to reproduce paper microbenchmarks regardless),
+  * serves previously-priced cases from the persistent content-hashed
+    CaseResult cache (ISSUE 6, core/result_cache.py): a rerun of an
+    overlapping grid — same process or a later session — re-prices only the
+    new cases, bit-identically to the uncached path. serve-stage cases are
+    not cached (their SimResult carries full latency distributions); disable
+    per Study with `result_cache=False` or globally via REPRO_DISK_CACHE=0.
 
 Every case's numbers are bit-for-bit identical to the single-case seed path
 (`inference_model.generate` et al. with a cold Evaluator) — tested against
@@ -41,6 +47,7 @@ from .hardware import Device, System
 from .ir import FusedMatmulSpec, Graph, MatmulSpec
 from .mapper import is_memoized, matmul_perf_batch_multi
 from .precision import DEFAULT, PrecisionPolicy, policy_tag
+from .result_cache import MODEL_VERSION, DiskCache, content_key
 from . import simulator as sim_mod
 from .workload import TrafficWorkload, Workload
 
@@ -167,6 +174,8 @@ class StudyStats:
     systems: int = 0
     devices: int = 0
     matmul_pairs_presolved: int = 0   # unique un-memoized (device, shape)
+    case_cache_hits: int = 0          # CaseResults served from disk (ISSUE 6)
+    case_cache_misses: int = 0        # cacheable cases actually evaluated
     presolve_seconds: float = 0.0
     total_seconds: float = 0.0
 
@@ -175,6 +184,8 @@ class StudyStats:
                 f"skipped_unfit={self.skipped_unfit} "
                 f"systems={self.systems} devices={self.devices} "
                 f"matmul_pairs_presolved={self.matmul_pairs_presolved} "
+                f"case_cache_hits={self.case_cache_hits} "
+                f"case_cache_misses={self.case_cache_misses} "
                 f"presolve_s={self.presolve_seconds:.2f} "
                 f"total_s={self.total_seconds:.2f}")
 
@@ -296,7 +307,8 @@ class Study:
                  cases: Optional[Iterable[Case]] = None,
                  stage: str = "generate",
                  enforce_fits: bool = True,
-                 evaluators: Optional[Mapping[System, Evaluator]] = None
+                 evaluators: Optional[Mapping[System, Evaluator]] = None,
+                 result_cache: Optional[bool] = None
                  ) -> None:
         if cases is not None:
             if any(x is not None for x in (systems, configs, workloads,
@@ -317,6 +329,12 @@ class Study:
         self._evaluators: Dict[System, Evaluator] = \
             dict(evaluators) if evaluators else {}
         self._prices: Dict[tuple, tuple] = {}   # (device, link_bw) -> price
+        # persistent CaseResult layer (ISSUE 6): re-running an overlapping
+        # grid re-prices only new cases. result_cache=None follows the
+        # global disk switch (result_cache.configure / REPRO_DISK_CACHE),
+        # True forces the layer on for this Study, False opts out.
+        self._case_cache = None if result_cache is False \
+            else DiskCache("cases", enabled=result_cache)
 
     @staticmethod
     def _expand(systems, configs, plans, workloads, policies, fusions,
@@ -407,6 +425,49 @@ class Study:
             self._prices[key] = (a, c)
         return self._prices[key]
 
+    # ---- persistent CaseResult layer (ISSUE 6) -----------------------
+    _CASE_DOC_FIELDS = ("latency", "throughput", "dominant",
+                        "decode_dominant", "flops", "bytes", "prefill",
+                        "decode")
+
+    @staticmethod
+    def _case_key(case: Case) -> str:
+        """Content hash of everything that determines a case's numbers:
+        the full System/config/plan/workload/policy/fusion value tree, the
+        stage, the model-version salt, and the active mapper backend (JAX
+        latencies may differ from numpy in the last ulp — a warm rerun must
+        be bit-identical to its own backend's cold path). Display labels are
+        deliberately excluded: relabeling a grid point reuses its numbers."""
+        from .mapper import get_mapper_backend   # avoid import cycle at top
+        return content_key(
+            case.system, case.cfg, case.plan, case.workload, case.policy,
+            case.fusion, case.stage,
+            salt=f"{MODEL_VERSION}/case/{get_mapper_backend()}")
+
+    def _case_to_doc(self, r: CaseResult) -> dict:
+        return {"latency": r.latency, "throughput": r.throughput,
+                "dominant": r.dominant, "decode_dominant": r.decode_dominant,
+                "flops": r.flops, "bytes": r.bytes,
+                "prefill": r.prefill_latency, "decode": r.decode_latency}
+
+    def _case_from_doc(self, doc: dict, case: Case, mem: float,
+                       fits: bool) -> Optional[CaseResult]:
+        if not all(f in doc for f in self._CASE_DOC_FIELDS):
+            return None                     # malformed/older entry: miss
+        try:
+            price_a, price_c = self._price(case.system)
+            sys_cost = price_c * case.system.device_count
+            thr = float(doc["throughput"])
+            return CaseResult(
+                case, float(doc["latency"]), thr, mem, fits,
+                str(doc["dominant"]), str(doc["decode_dominant"]),
+                float(doc["flops"]), float(doc["bytes"]),
+                float(doc["prefill"]), float(doc["decode"]),
+                price_a, price_c, sys_cost,
+                thr / sys_cost if sys_cost > 0 else 0.0)
+        except (TypeError, ValueError):
+            return None
+
     # ------------------------------------------------------------------
     def run(self) -> StudyResult:
         t0 = time.perf_counter()
@@ -427,10 +488,34 @@ class Study:
             fits = mem <= case.system.device.memory_capacity
             prelim.append((case, mem, fits))
 
+        # ---- persistent CaseResult layer: hits skip graph building, the
+        # ---- mapper presolve AND evaluation (re-price only new cases) ----
+        cached: Dict[int, CaseResult] = {}
+        keys: Dict[int, str] = {}
+        cc = self._case_cache
+        if cc is not None and cc.enabled:
+            for idx, (case, mem, fits) in enumerate(prelim):
+                if case.stage == "serve":
+                    continue        # sim replays carry full distributions
+                if self.enforce_fits and not fits:
+                    continue
+                key = self._case_key(case)
+                keys[idx] = key
+                doc = cc.get(key)
+                r = self._case_from_doc(doc, case, mem, fits) \
+                    if doc is not None else None
+                if r is not None:
+                    cached[idx] = r
+                    stats.case_cache_hits += 1
+                else:
+                    stats.case_cache_misses += 1
+
         # ---- grid-wide device-axis stacked mapper search -----------------
         t_pre = time.perf_counter()
         pairs, seen = [], set()
-        for case, _, fits in prelim:
+        for idx, (case, _, fits) in enumerate(prelim):
+            if idx in cached:
+                continue
             if self.enforce_fits and not fits:
                 continue
             ev = evaluators[case.system]
@@ -455,7 +540,11 @@ class Study:
 
         # ---- per-case evaluation (all mapper work is now memo hits) ------
         results = []
-        for case, mem, fits in prelim:
+        for idx, (case, mem, fits) in enumerate(prelim):
+            if idx in cached:
+                stats.evaluated += 1
+                results.append(cached[idx])
+                continue
             price_a, price_c = self._price(case.system)
             sys_cost = price_c * case.system.device_count
             if self.enforce_fits and not fits:
@@ -466,9 +555,11 @@ class Study:
                     price_a, price_c, sys_cost, 0.0))
                 continue
             stats.evaluated += 1
-            results.append(self._evaluate(
-                case, mem, fits, evaluators[case.system],
-                price_a, price_c, sys_cost))
+            r = self._evaluate(case, mem, fits, evaluators[case.system],
+                               price_a, price_c, sys_cost)
+            if idx in keys:
+                cc.put(keys[idx], self._case_to_doc(r))
+            results.append(r)
         stats.total_seconds = time.perf_counter() - t0
         return StudyResult(results, stats, evaluators)
 

@@ -46,27 +46,33 @@ def gemm_cycles(m: int, k: int, n: int, rows: int, cols: int) -> int:
     return total
 
 
-def gemm_cycles_array(m, k, n, rows: int, cols: int):
-    """Vectorized (numpy) version used by the mapper's parameter search.
+def gemm_cycles_array(m, k, n, rows, cols, xp=np):
+    """Vectorized version used by the mapper's parameter search.
 
-    m, k, n: broadcastable integer arrays. Returns int64 array of cycles.
+    m, k, n: broadcastable integer arrays; rows/cols may be scalars or
+    per-row arrays (the mapper's device axis). Returns int64 array of cycles.
     This is the LUT-free fast path: the closed form is cheap enough to
     evaluate for ~1e5 candidates at once, which is what makes our mapper
     ~1000x faster than a per-candidate loop (paper: 26,400 rounds in ~15 min).
+
+    `xp` selects the array module: numpy (default) or jax.numpy — the same
+    closed form serves both mapper backends (core/mapper_jax.py traces it
+    into the jitted candidate-table kernel; winners are backend-independent,
+    tests/test_mapper_jax.py).
     """
-    m = np.asarray(m, dtype=np.int64)
-    k = np.asarray(k, dtype=np.int64)
-    n = np.asarray(n, dtype=np.int64)
-    full_r, rem_r = np.divmod(m, rows)
-    full_c, rem_c = np.divmod(n, cols)
+    m = xp.asarray(m, dtype=xp.int64)
+    k = xp.asarray(k, dtype=xp.int64)
+    n = xp.asarray(n, dtype=xp.int64)
+    full_r, rem_r = xp.divmod(m, rows)
+    full_c, rem_c = xp.divmod(n, cols)
 
     def pc(r_occ, c_occ):
         return 2 * r_occ + c_occ + k - 2
 
     total = full_r * full_c * pc(rows, cols)
-    total = total + np.where(rem_r > 0, full_c * pc(rem_r, cols), 0)
-    total = total + np.where(rem_c > 0, full_r * pc(rows, rem_c), 0)
-    total = total + np.where((rem_r > 0) & (rem_c > 0), pc(rem_r, rem_c), 0)
+    total = total + xp.where(rem_r > 0, full_c * pc(rem_r, cols), 0)
+    total = total + xp.where(rem_c > 0, full_r * pc(rows, rem_c), 0)
+    total = total + xp.where((rem_r > 0) & (rem_c > 0), pc(rem_r, rem_c), 0)
     return total
 
 

@@ -2,8 +2,17 @@
 see 1 device; multi-device tests spawn subprocesses (test_multidevice.py)."""
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Point the persistent result cache (core/result_cache.py) at a per-session
+# temp dir BEFORE repro imports: tests must start cold and never read or
+# pollute the developer's ~/.cache across runs. Within one session the layer
+# stays live — cross-test disk hits return values bit-identical to what the
+# same code would compute, and test_result_cache.py exercises it explicitly.
+os.environ.setdefault(
+    "REPRO_CACHE_DIR", tempfile.mkdtemp(prefix="repro-test-cache-"))
 
 import jax
 import pytest

@@ -1,0 +1,315 @@
+"""ISSUE 6: the persistent content-hashed result layer + bounded LRU memo.
+
+Covers the storage module itself (canonical hashing, atomic writes,
+corruption tolerance, stale-salt invalidation), the mapper's two memo layers
+(bounded LRU with eviction accounting — the seed's dict silently stopped
+inserting at capacity — and the disk-backed warm path), EvalStats
+attribution, and the Study-level CaseResult cache (warm reruns bit-identical
+to the uncached path, malformed entries re-priced).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import hardware as hw
+from repro.core import mapper
+from repro.core import result_cache
+from repro.core.evaluator import Evaluator
+from repro.core.graph import Plan, build_model
+from repro.core.mapper import (clear_matmul_cache, matmul_cache_stats,
+                               matmul_perf_batch, reset_matmul_cache_stats)
+from repro.core.result_cache import (DiskCache, canonical, content_key,
+                                     cache_enabled, cache_root)
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
+from repro.configs import get_config
+
+A100 = hw.nvidia_a100()
+
+# cheap-to-search distinct shapes (full 10-tuples)
+def _shape(m, k=256, n=256):
+    return (m, k, n, 1, 2, 2, 2, 2, False, 1.0)
+
+
+@pytest.fixture(autouse=True)
+def _cold_memo():
+    clear_matmul_cache()
+    reset_matmul_cache_stats()
+    yield
+    clear_matmul_cache()
+    reset_matmul_cache_stats()
+
+
+# ---------------------------------------------------------------------------
+# canonical hashing
+# ---------------------------------------------------------------------------
+
+def test_canonical_float_repr_roundtrip():
+    assert canonical(0.1) == repr(0.1)
+    assert float(canonical(1 / 3)) == 1 / 3
+    assert content_key(0.1) != content_key(0.1 + 2 ** -55)
+
+
+def test_canonical_distinguishes_dataclass_types():
+    @dataclasses.dataclass(frozen=True)
+    class P:
+        x: int = 1
+
+    @dataclasses.dataclass(frozen=True)
+    class Q:
+        x: int = 1
+
+    assert content_key(P()) != content_key(Q())
+
+
+def test_canonical_numpy_scalars_collapse():
+    assert canonical(np.int64(5)) == 5
+    assert content_key(np.float64(0.5)) == content_key(0.5)
+
+
+def test_canonical_rejects_non_value_types():
+    with pytest.raises(TypeError):
+        canonical(lambda: 0)
+    with pytest.raises(TypeError):
+        content_key(np.zeros(3))
+
+
+def test_content_key_salt_invalidates():
+    dev = A100
+    assert content_key(dev, salt="hwe-v6") != content_key(dev, salt="hwe-v7")
+
+
+# ---------------------------------------------------------------------------
+# DiskCache
+# ---------------------------------------------------------------------------
+
+def test_disk_roundtrip_stats_and_clear(tmp_path):
+    dc = DiskCache("t", root=tmp_path, enabled=True)
+    key = content_key("hello")
+    assert dc.get(key) is None and dc.stats.misses == 1
+    dc.put(key, {"v": [1, 2.5, "x"]})
+    assert dc.stats.puts == 1 and len(dc) == 1
+    assert dc.get(key) == {"v": [1, 2.5, "x"]} and dc.stats.hits == 1
+    dc.clear()
+    assert len(dc) == 0 and dc.get(key) is None
+
+
+def test_disk_corrupt_entry_dropped(tmp_path):
+    dc = DiskCache("t", root=tmp_path, enabled=True)
+    key = content_key("x")
+    dc.put(key, {"v": 1})
+    path = dc._path(key)
+    path.write_text("{torn wri")
+    assert dc.get(key) is None
+    assert dc.stats.corrupt == 1
+    assert not path.exists()            # dropped, not re-read forever
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps([1, 2]))  # valid JSON, wrong shape
+    assert dc.get(key) is None and dc.stats.corrupt == 2
+
+
+def test_disk_disabled_is_inert(tmp_path):
+    dc = DiskCache("t", root=tmp_path, enabled=False)
+    dc.put(content_key("x"), {"v": 1})
+    assert len(dc) == 0 and dc.get(content_key("x")) is None
+    # enabled=None follows the global switch
+    follow = DiskCache("t2", root=tmp_path)
+    with result_cache.disabled():
+        assert not follow.enabled
+        follow.put(content_key("x"), {"v": 1})
+    assert len(follow) == 0
+
+
+def test_overridden_restores_root_and_switch(tmp_path):
+    root0, on0 = cache_root(), cache_enabled()
+    with result_cache.overridden(root=tmp_path / "a", enabled=True):
+        assert cache_root() == tmp_path / "a" and cache_enabled()
+        with result_cache.disabled():
+            assert not cache_enabled()
+        assert cache_enabled()
+    assert cache_root() == root0 and cache_enabled() == on0
+
+
+# ---------------------------------------------------------------------------
+# mapper: bounded LRU memo
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_bounds_and_counts(monkeypatch):
+    monkeypatch.setattr(mapper, "_MM_CACHE_MAX", 3)
+    with result_cache.disabled():
+        shapes = [_shape(8 * (i + 1)) for i in range(5)]
+        matmul_perf_batch(A100, shapes)
+        st = matmul_cache_stats()
+        assert len(mapper._MM_CACHE) <= 3
+        assert st.evictions >= 2 and st.misses == 5
+        # the two oldest shapes were evicted — searching them again misses
+        matmul_perf_batch(A100, shapes[:1])
+        assert matmul_cache_stats().misses == 6
+
+
+def test_lru_hit_refreshes_recency(monkeypatch):
+    monkeypatch.setattr(mapper, "_MM_CACHE_MAX", 3)
+    with result_cache.disabled():
+        a, b, c, d = [_shape(8 * (i + 1)) for i in range(4)]
+        matmul_perf_batch(A100, [a, b, c])
+        matmul_perf_batch(A100, [a])        # touch a: now LRU order b, c, a
+        matmul_perf_batch(A100, [d])        # evicts b, not a
+        assert mapper.is_memoized(A100, a)
+        assert not mapper.is_memoized(A100, b)
+        assert matmul_cache_stats().memo_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# mapper: persistent layer
+# ---------------------------------------------------------------------------
+
+def test_mapper_disk_warm_restart_bit_identical(tmp_path):
+    shapes = [_shape(16), _shape(48, 128, 512)]
+    puts0 = mapper._disk_cache().stats.puts    # session-cumulative counter
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        cold = matmul_perf_batch(A100, shapes)
+        st = matmul_cache_stats()
+        assert st.misses == 2
+        assert mapper._disk_cache().stats.puts == puts0 + 2
+        clear_matmul_cache()                # "new process": memo gone
+        warm = matmul_perf_batch(A100, shapes)
+        assert matmul_cache_stats().disk_hits == 2
+        for c, w in zip(cold, warm):
+            assert c == w                   # frozen dataclasses: bit-exact
+        clear_matmul_cache(disk=True)
+        assert len(mapper._disk_cache()) == 0
+
+
+def test_mapper_stale_salt_unreachable(tmp_path, monkeypatch):
+    shape = [_shape(24)]
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        matmul_perf_batch(A100, shape)
+        clear_matmul_cache()
+        monkeypatch.setattr(mapper, "MODEL_VERSION", "hwe-vNEXT")
+        matmul_perf_batch(A100, shape)
+        st = matmul_cache_stats()
+        assert st.disk_hits == 0 and st.misses == 2   # old entry unreachable
+
+
+def test_mapper_disk_key_includes_backend(tmp_path, monkeypatch):
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        k_np = mapper._pair_key(A100, _shape(16))
+        monkeypatch.setattr(mapper, "_BACKEND", "jax")
+        assert mapper._pair_key(A100, _shape(16)) != k_np
+
+
+def test_mapper_malformed_disk_doc_is_missed(tmp_path):
+    shape = [_shape(32)]
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        cold = matmul_perf_batch(A100, shape)
+        key = mapper._pair_key(A100, shape[0])
+        mapper._disk_cache().put(key, {"latency": 1.0})   # truncated doc
+        clear_matmul_cache()
+        again = matmul_perf_batch(A100, shape)
+        assert again[0] == cold[0]          # re-searched, not garbage
+        assert matmul_cache_stats().misses == 2
+
+
+# ---------------------------------------------------------------------------
+# EvalStats attribution
+# ---------------------------------------------------------------------------
+
+def _graph():
+    return build_model(get_config("qwen2-0.5b"), Plan(tp=1), batch=4,
+                       seq=128, kv_len=128)
+
+
+def test_evalstats_memo_and_disk_hits(tmp_path):
+    sys1 = hw.make_system(A100, 1, 600, "fc")
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        ev1 = Evaluator(sys1)
+        ev1.evaluate(_graph())
+        assert ev1.stats.mapper_memo_hits == 0
+        assert ev1.stats.mapper_disk_hits == 0
+        # same process: the global LRU serves a fresh Evaluator
+        ev2 = Evaluator(sys1)
+        ev2.evaluate(_graph())
+        assert ev2.stats.mapper_memo_hits > 0
+        # "new process": memo dropped, the disk layer serves instead
+        clear_matmul_cache()
+        ev3 = Evaluator(sys1)
+        ev3.evaluate(_graph())
+        assert ev3.stats.mapper_disk_hits > 0
+        assert ev3.stats.mapper_memo_hits == 0
+
+
+def test_evalstats_eviction_attribution(tmp_path, monkeypatch):
+    monkeypatch.setattr(mapper, "_MM_CACHE_MAX", 2)
+    with result_cache.disabled():
+        ev = Evaluator(hw.make_system(A100, 1, 600, "fc"))
+        ev.evaluate(_graph())
+        assert ev.stats.mapper_evictions > 0
+
+
+# ---------------------------------------------------------------------------
+# Study CaseResult cache
+# ---------------------------------------------------------------------------
+
+def _cases():
+    sysA = hw.make_system(hw.compute_design("A"), 4, 600, "fc")
+    cfg = get_config("qwen2-0.5b")
+    return [Case(sysA, cfg, Plan(tp=1, dp=4), w, label=n)
+            for n, w in (("a", Workload(4, 256, 64)),
+                         ("b", Workload(8, 128, 128)))]
+
+
+def test_study_warm_rerun_bit_identical(tmp_path):
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        cold = Study(cases=_cases(), enforce_fits=False).run()
+        assert cold.stats.case_cache_misses == 2
+        assert cold.stats.case_cache_hits == 0
+        clear_matmul_cache()
+        warm = Study(cases=_cases(), enforce_fits=False).run()
+        assert warm.stats.case_cache_hits == 2
+        assert warm.stats.matmul_pairs_presolved == 0   # nothing re-priced
+        for c, w in zip(cold, warm):
+            assert c.latency == w.latency
+            assert c.throughput == w.throughput
+            assert c.prefill_latency == w.prefill_latency
+            assert c.decode_latency == w.decode_latency
+            assert c.dominant == w.dominant
+
+
+def test_study_overlapping_grid_reprices_only_new(tmp_path):
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        Study(cases=_cases()[:1], enforce_fits=False).run()
+        both = Study(cases=_cases(), enforce_fits=False).run()
+        assert both.stats.case_cache_hits == 1
+        assert both.stats.case_cache_misses == 1
+
+
+def test_study_result_cache_opt_out(tmp_path):
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        Study(cases=_cases(), enforce_fits=False, result_cache=False).run()
+        again = Study(cases=_cases(), enforce_fits=False,
+                      result_cache=False).run()
+        assert again.stats.case_cache_hits == 0
+        assert again.stats.case_cache_misses == 0
+
+
+def test_study_stale_salt_reprices(tmp_path, monkeypatch):
+    import repro.core.study as study_mod
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        Study(cases=_cases(), enforce_fits=False).run()
+        monkeypatch.setattr(study_mod, "MODEL_VERSION", "hwe-vNEXT")
+        rerun = Study(cases=_cases(), enforce_fits=False).run()
+        assert rerun.stats.case_cache_hits == 0
+        assert rerun.stats.case_cache_misses == 2
+
+
+def test_study_malformed_case_doc_reprices(tmp_path):
+    with result_cache.overridden(root=tmp_path, enabled=True):
+        cold = Study(cases=_cases(), enforce_fits=False).run()
+        s = Study(cases=_cases(), enforce_fits=False)
+        key = s._case_key(s.cases[0])
+        s._case_cache.put(key, {"latency": 1.0})        # truncated doc
+        rerun = s.run()
+        assert rerun.stats.case_cache_hits == 1         # the intact one
+        assert rerun[0].latency == cold[0].latency      # re-priced correctly
