@@ -33,7 +33,7 @@ def main(argv=None) -> None:
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
                    mapper_speed, planner_archs, precision_sweep,
-                   schedule_overlap, serving_sim, study_speed)
+                   schedule_overlap, serving_sim, study_speed, verify_lint)
 
     if args.quick:
         modules = [
@@ -45,6 +45,7 @@ def main(argv=None) -> None:
             ("serving_sim", serving_sim, {"quick": True}),
             ("precision_sweep", precision_sweep, {"quick": True}),
             ("schedule_overlap", schedule_overlap, {"quick": True}),
+            ("verify_lint", verify_lint, {"quick": True}),
         ]
     else:
         modules = [
@@ -60,6 +61,7 @@ def main(argv=None) -> None:
             ("serving_sim", serving_sim, {}),
             ("precision_sweep", precision_sweep, {}),
             ("schedule_overlap", schedule_overlap, {}),
+            ("verify_lint", verify_lint, {}),
         ]
 
     print("name,us_per_call,derived")

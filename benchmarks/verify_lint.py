@@ -1,0 +1,100 @@
+"""ISSUE 7 acceptance benchmark: the static verifier over the shipped
+matrix, plus its runtime overhead on a cold Study.
+
+Two claims are checked:
+
+  * zero error-severity diagnostics across every shipped
+    config/plan/policy/fusion combination (`repro.verify.lint_all` — the
+    same matrix `python -m repro.verify --all-configs` gates CI on); the
+    counts land in the --json bench report next to the other checks;
+  * verification overhead < 5% of a cold study run. Measured directly
+    rather than by A/B wall-clock: the lint work the verify wiring adds to
+    a cold Study (plan/policy rules per unique grid point + graph rules per
+    unique graph) is timed on its own and divided by the cold study's
+    uncached wall-clock, so the check is deterministic instead of riding
+    run-to-run mapper-search noise.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import result_cache
+from repro.core import verify as verify_core
+from repro.core.mapper import clear_matmul_cache
+from repro.core.study import Study
+from repro.verify import lint_all
+
+from .common import emit
+from .study_speed import _cases
+
+
+def run(quick: bool = False) -> dict:
+    # ---- shipped-matrix lint: the CI gate's numbers ----------------------
+    t0 = time.perf_counter()
+    report = lint_all(all_configs=True)
+    dt_lint = time.perf_counter() - t0
+    counts = {"error": 0, "warn": 0, "info": 0}
+    for row in report:
+        counts[row["severity"]] += 1
+    emit("verify/shipped_matrix", dt_lint * 1e6,
+         f"errors={counts['error']};warns={counts['warn']};"
+         f"infos={counts['info']}")
+
+    # ---- overhead on a cold study (study_speed's grid) -------------------
+    cases = _cases(quick=True)
+    with result_cache.disabled():
+        clear_matmul_cache()
+        t0 = time.perf_counter()
+        Study(cases=cases, enforce_fits=False, verify="off").run()
+        dt_study = time.perf_counter() - t0
+        clear_matmul_cache()
+
+    # the exact lint work the wiring adds to that run: plan+policy rules
+    # once per unique grid point, graph rules once per unique graph
+    points, graphs = set(), {}
+    for case in cases:
+        w = case.workload
+        points.add((case.system, case.cfg, case.plan, case.policy,
+                    w.batch, w.total_len))
+        for g in Study._graphs(case):
+            graphs.setdefault(case.system.device, set()).add(g)
+    by_point = {p: c for c, p in zip(
+        cases, ((c.system, c.cfg, c.plan, c.policy, c.workload.batch,
+                 c.workload.total_len) for c in cases))}
+    t0 = time.perf_counter()
+    n_diags = 0
+    for point in points:
+        case = by_point[point]
+        w = case.workload
+        n_diags += len(verify_core.plan_diagnostics(
+            case.system, case.cfg, case.plan, policy=case.policy,
+            batch=w.batch, max_len=w.total_len, check_memory=False))
+        n_diags += len(verify_core.policy_diagnostics(case.policy,
+                                                      case.system.device))
+    for dev, gs in sorted(graphs.items(), key=lambda kv: kv[0].name):
+        for g in gs:
+            n_diags += len(verify_core.graph_diagnostics(g, dev))
+    dt_verify = time.perf_counter() - t0
+
+    overhead = dt_verify / max(dt_study, 1e-9)
+    emit("verify/study_overhead", dt_verify * 1e6,
+         f"study_s={dt_study:.2f};verify_s={dt_verify:.4f};"
+         f"overhead={overhead:.2%};graphs={sum(len(g) for g in graphs.values())};"
+         f"points={len(points)};diags={n_diags}")
+
+    return {
+        "matrix_errors": counts["error"],
+        "matrix_warns": counts["warn"],
+        "matrix_infos": counts["info"],
+        "zero_errors": counts["error"] == 0,
+        "zero_warns": counts["warn"] == 0,
+        "lint_seconds": round(dt_lint, 2),
+        "study_seconds": round(dt_study, 2),
+        "verify_seconds": round(dt_verify, 4),
+        "overhead_ratio": round(overhead, 4),
+        "overhead_under_5pct": overhead < 0.05,
+    }
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

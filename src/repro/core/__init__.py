@@ -2,9 +2,9 @@
 from . import hardware, systolic, mapper, operators, interconnect
 from . import ir, evaluator, workload, scheduler, precision
 from . import area, cost, graph, inference_model, simulator, study, planner
-from . import roofline
+from . import roofline, verify
 
 __all__ = ["hardware", "systolic", "mapper", "operators", "interconnect",
            "ir", "evaluator", "workload", "scheduler", "precision",
            "area", "cost", "graph", "inference_model", "simulator", "study",
-           "planner", "roofline"]
+           "planner", "roofline", "verify"]

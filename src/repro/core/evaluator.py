@@ -31,6 +31,7 @@ from .ir import (CollectiveSpec, ElementwiseSpec, FusedMatmulSpec, Graph,
                  TrafficSpec, resource_of)
 from .mapper import matmul_cache_stats, matmul_perf_batch
 from .schedule import schedule_graph
+from . import verify as verify_mod
 
 
 @dataclass
@@ -86,7 +87,8 @@ class Evaluator:
     """Evaluate IR graphs on one System, deduplicating and batching work."""
 
     def __init__(self, system: System, batch_matmuls: bool = True,
-                 use_reference_mapper: bool = False) -> None:
+                 use_reference_mapper: bool = False,
+                 verify: str | None = None) -> None:
         self._device_only = isinstance(system, Device)
         if self._device_only:   # device-only use: no real link parameters
             system = _single_device_system(system)
@@ -98,6 +100,12 @@ class Evaluator:
         self.use_reference_mapper = use_reference_mapper
         if use_reference_mapper:
             self.batch_matmuls = False
+        # static verification mode (ISSUE 7): "error" | "warn" | "off",
+        # defaulting to $REPRO_VERIFY else "warn". Graphs are linted once
+        # each (they are frozen/hashable) before any mapper work; overlap
+        # schedules are certificate-checked after scheduling.
+        self.verify_mode = verify_mod.resolve_mode(verify)
+        self._verified: set[Graph] = set()
         self._cache: Dict[OpSpec, ops.OpResult] = {}
         self.stats = EvalStats()
 
@@ -243,6 +251,12 @@ class Evaluator:
         producers) instead of the serial sum, and carries the per-op
         start/end schedule."""
         from .graph import LayerCost      # late import: graph builds on ir
+        if self.verify_mode != "off":
+            for g in graphs:
+                if g not in self._verified:
+                    verify_mod.verify_graph(g, self.device,
+                                            mode=self.verify_mode)
+                    self._verified.add(g)
         prefetched = self._prefetch_matmuls(graphs) if self.batch_matmuls \
             else set()
         out = []
@@ -262,7 +276,13 @@ class Evaluator:
                     r.main_memory_bytes * node.repeat, r.bound, r.mapping))
             cost._resources = tuple(resource_of(n.spec) for n in g)
             if overlap:
-                sch = schedule_graph(g, [o.latency for o in cost.ops])
+                lats = [o.latency for o in cost.ops]
+                sch = schedule_graph(g, lats)
+                if self.verify_mode != "off":
+                    # certificate check: the schedule really is a feasible
+                    # witness of its claimed makespan (ISSUE 7)
+                    verify_mod.verify_schedule(g, lats, sch,
+                                               mode=self.verify_mode)
                 cost.schedule = sch
                 self.stats.serial_seconds += sch.serial
                 self.stats.scheduled_seconds += sch.makespan

@@ -50,9 +50,10 @@ def _report(cost: LayerCost) -> PerfReport:
                       schedule=cost.schedule)
 
 
-def _evaluator(system: System, evaluator: Optional[Evaluator]) -> Evaluator:
+def _evaluator(system: System, evaluator: Optional[Evaluator],
+               verify: Optional[str] = None) -> Evaluator:
     if evaluator is None:
-        return Evaluator(system)
+        return Evaluator(system, verify=verify)
     if evaluator.system != system:
         raise ValueError(
             f"evaluator was built for {evaluator.system.device.name} x"
@@ -222,14 +223,20 @@ def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
         expert_n = cfg.n_layers * cfg.n_experts * cfg.mlp_params()
         param_n = param_n - expert_n * (plan.ep - 1) / plan.ep
     params = param_n * wb / (plan.tp * plan.pp)
-    kv = batch * max_len * cfg.kv_bytes_per_token(kvb) / (plan.tp * plan.pp)
+    # KV shards at most n_kv_heads ways: past that, tp ranks hold replicas
+    # (each rank computes a distinct query-head group against a KV head that
+    # also lives elsewhere — graph.build_attention's hkv = max(1, kv//tp)).
+    # Dividing by tp would under-count the replicated copies; the verifier
+    # notes such plans as plan.tp-kv-heads (ISSUE 7).
+    kv_ways = min(plan.tp, cfg.n_kv_heads) if cfg.n_kv_heads else plan.tp
+    kv = batch * max_len * cfg.kv_bytes_per_token(kvb) / (kv_ways * plan.pp)
     if cfg.attn_window:   # local attention caps the resident KV window
         n_attn = sum(1 for i in range(cfg.n_layers)
                      if cfg.block_kind(i) == "attn")
         if n_attn:
             per_layer = cfg.kv_bytes_per_token(kvb) / n_attn
             kv = batch * min(max_len, cfg.attn_window) * per_layer * n_attn \
-                / (plan.tp * plan.pp)
+                / (kv_ways * plan.pp)
     # recurrent state (rwkv/rglru)
     state = 0.0
     for i in range(cfg.n_layers):

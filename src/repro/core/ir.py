@@ -57,7 +57,9 @@ class MatmulSpec:
     mac_scale: float = 1.0
 
     @property
-    def shape(self) -> tuple:
+    def shape(self) -> Tuple[int, int, int, int, Union[int, float],
+                             Union[int, float], Union[int, float],
+                             Union[int, float], bool, float]:
         """The mapper's MatmulShape tuple for this spec."""
         return (self.m, self.k, self.n, self.batch, self.bytes_a,
                 self.bytes_b, self.bytes_out, self.bytes_acc, self.b_shared,

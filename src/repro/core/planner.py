@@ -51,7 +51,17 @@ def enumerate_plans(system: System, cfg: ModelConfig,
             continue
         if cfg.n_heads and cfg.n_kv_heads and tp > cfg.n_kv_heads * cfg.group_size:
             continue
+        if cfg.n_heads and tp > 1 and cfg.n_heads % tp:
+            # the builder shards heads as floor(n_heads/tp) per device, so a
+            # non-dividing tp silently drops attention work — the verifier
+            # flags such plans as plan.tp-heads errors (ISSUE 7); qwen2's 14
+            # heads at tp=4 modeled only 12 before this gate
+            continue
         for pp in _divisors(n // tp):
+            if pp > 1 and pp > cfg.n_layers:
+                # more stages than layers: ceil-sized stages would price
+                # phantom layers (verifier rule plan.pp-layers)
+                continue
             dp = n // (tp * pp)
             ep = 1
             if cfg.n_experts:

@@ -106,7 +106,7 @@ class PrecisionPolicy:
                 f"_kv{self.kv_cache.name}_acc{self.accumulator.name}")
 
     # -- spec kwargs for graph builders ------------------------------------
-    def weight_gemm(self) -> dict:
+    def weight_gemm(self) -> Dict[str, Union[int, float]]:
         """MatmulSpec width kwargs for activation x weight GEMMs."""
         return dict(bytes_a=self.activations.bytes,
                     bytes_b=self.weights.bytes,
@@ -114,7 +114,7 @@ class PrecisionPolicy:
                     bytes_acc=self.accumulator.bytes,
                     mac_scale=mac_scale(self.activations, self.weights))
 
-    def attn_gemm(self) -> dict:
+    def attn_gemm(self) -> Dict[str, Union[int, float]]:
         """MatmulSpec width kwargs for attention score/value GEMMs, whose B
         operand streams from the KV cache."""
         return dict(bytes_a=self.activations.bytes,
@@ -123,7 +123,7 @@ class PrecisionPolicy:
                     bytes_acc=self.accumulator.bytes,
                     mac_scale=mac_scale(self.activations, self.kv_cache))
 
-    def with_(self, **kw) -> "PrecisionPolicy":
+    def with_(self, **kw: DType) -> "PrecisionPolicy":
         """Named-field variant (`DEFAULT.with_(weights=INT8)`)."""
         return replace(self, **kw)
 

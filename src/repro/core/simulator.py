@@ -45,6 +45,7 @@ from .graph import Graph, LayerCost, Plan, build_model
 from .hardware import System
 from .precision import DEFAULT, PrecisionPolicy
 from .scheduler import SlotScheduler
+from . import verify as verify_mod
 from .workload import Trace, TrafficWorkload
 
 __all__ = ["Trace", "TrafficWorkload", "SimResult", "RequestStats",
@@ -257,7 +258,8 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
              traffic: TrafficWorkload,
              evaluator: Optional[Evaluator] = None,
              policy: PrecisionPolicy = DEFAULT,
-             fusion: FusionPolicy = SERIAL) -> SimResult:
+             fusion: FusionPolicy = SERIAL,
+             verify: Optional[str] = None) -> SimResult:
     """Replay `traffic.trace` through the engine's slot scheduler, pricing
     every wave/round analytically. See the module docstring for the model.
 
@@ -280,7 +282,17 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
     if any(r.out_len < 1 for r in trace):
         raise ValueError("every trace request must generate >= 1 token")
     B = traffic.batch
-    ev = im._evaluator(system, evaluator)
+    # static verification (ISSUE 7): plan + policy rules up front; the
+    # sampled wave/round graphs are linted by the Evaluator below. Memory
+    # capacity is the serve-stage Study gate's call, not re-proved here.
+    mode = verify_mod.resolve_mode(verify)
+    if mode != "off":
+        diags = verify_mod.plan_diagnostics(
+            system, cfg, plan, policy=policy, batch=B,
+            max_len=traffic.total_len, check_memory=False)
+        diags += verify_mod.policy_diagnostics(policy, system.device)
+        verify_mod.apply_mode(diags, mode)
+    ev = im._evaluator(system, evaluator, verify=mode)
 
     # ---- price all sampled graphs in ONE batched evaluation --------------
     graphs, in_pts, kv_pts = _graphs_and_axes(cfg, plan, traffic, policy,

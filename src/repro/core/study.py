@@ -49,6 +49,7 @@ from .mapper import is_memoized, matmul_perf_batch_multi
 from .precision import DEFAULT, PrecisionPolicy, policy_tag
 from .result_cache import MODEL_VERSION, DiskCache, content_key
 from . import simulator as sim_mod
+from . import verify as verify_mod
 from .workload import TrafficWorkload, Workload
 
 #: evaluation stages a Case can request
@@ -308,7 +309,8 @@ class Study:
                  stage: str = "generate",
                  enforce_fits: bool = True,
                  evaluators: Optional[Mapping[System, Evaluator]] = None,
-                 result_cache: Optional[bool] = None
+                 result_cache: Optional[bool] = None,
+                 verify: Optional[str] = None
                  ) -> None:
         if cases is not None:
             if any(x is not None for x in (systems, configs, workloads,
@@ -335,6 +337,11 @@ class Study:
         # True forces the layer on for this Study, False opts out.
         self._case_cache = None if result_cache is False \
             else DiskCache("cases", enabled=result_cache)
+        # static verification mode (ISSUE 7): plan/policy rules run once per
+        # unique grid point before any evaluation; graphs are linted by the
+        # shared Evaluators as cases price. enforce_fits owns the memory
+        # decision, so verify_case skips the capacity rule here.
+        self.verify_mode = verify_mod.resolve_mode(verify)
 
     @staticmethod
     def _expand(systems, configs, plans, workloads, policies, fusions,
@@ -383,7 +390,8 @@ class Study:
     def _evaluator(self, system: System) -> Evaluator:
         """One Evaluator per System for the Study's lifetime: provided ones
         are validated, created ones are kept so rerunning run() reuses them."""
-        ev = im._evaluator(system, self._evaluators.get(system))
+        ev = im._evaluator(system, self._evaluators.get(system),
+                           verify=self.verify_mode)
         self._evaluators[system] = ev
         return ev
 
@@ -478,6 +486,20 @@ class Study:
                 evaluators[case.system] = self._evaluator(case.system)
         stats.systems = len(evaluators)
         stats.devices = len({s.device for s in evaluators})
+
+        # ---- static verification pre-pass (ISSUE 7) ----------------------
+        # plan + policy rules once per unique grid point, before any mapper
+        # or memory work; cases sharing a point share one lint.
+        if self.verify_mode != "off":
+            linted = set()
+            for case in self.cases:
+                w = case.workload
+                point = (case.system, case.cfg, case.plan, case.policy,
+                         w.batch, w.total_len)
+                if point in linted:
+                    continue
+                linted.add(point)
+                verify_mod.verify_case(case, mode=self.verify_mode)
 
         # ---- memory-fit pre-pass (planner model; no evaluation cost) -----
         prelim = []

@@ -1,0 +1,151 @@
+"""Purity lint (ISSUE 7, satellite): the persistent result cache is only
+sound if everything on a cache-keyed path is deterministic — same inputs,
+same bytes, across processes and sessions. This AST lint walks the
+functions that either compute cache keys or produce the values stored
+under them and forbids the classic nondeterminism sources:
+
+  * wall clocks and entropy: `time`, `random`, `datetime`, `uuid`,
+    `secrets`, `np.random`, `os.urandom`
+  * environment reads: `os.environ`, `os.getenv` (configuration must flow
+    through arguments, not ambient state)
+  * process-local identity: `id()`, `hash()` (PYTHONHASHSEED-salted for
+    str/bytes), `globals()`, `locals()`, `vars()`
+  * dict-order-dependent iteration: bare `.items()` / `.keys()` /
+    `.values()` in a `for` or comprehension, unless wrapped in `sorted()`.
+    (Python dicts preserve insertion order, but insertion order is exactly
+    what a refactor silently changes — canonical() sorts for a reason.)
+
+The linted set is the cache-keyed core: mapper's batched-search stages
+(their MatmulResults go to the persistent matmul cache), result_cache's
+canonicalization/keying, and Study's CaseResult keying/serialization.
+"""
+import ast
+import inspect
+import textwrap
+
+import pytest
+
+from repro.core import mapper, result_cache
+from repro.core.study import Study
+
+#: functions on result_cache-keyed paths: keys must be stable AND the
+#: values stored under them must be reproducible
+LINTED = [
+    mapper._gather_chunk,
+    mapper._chunk_tables_numpy,
+    mapper._pick_winners,
+    mapper._solve_chunk,
+    mapper._pair_key,
+    mapper._result_to_doc,
+    result_cache.canonical,
+    result_cache.content_key,
+    Study._case_key,                # staticmethod resolves to the function
+    Study._case_to_doc,
+]
+
+_BANNED_NAMES = {"time", "random", "datetime", "uuid", "secrets"}
+_BANNED_CALLS = {"id", "hash", "globals", "locals", "vars", "getenv",
+                 "urandom"}
+_DICT_ITERS = {"items", "keys", "values"}
+
+
+def _violations(fn):
+    src = textwrap.dedent(inspect.getsource(fn))
+    tree = ast.parse(src)
+    out = []
+
+    class V(ast.NodeVisitor):
+        def visit_Name(self, node):
+            if node.id in _BANNED_NAMES:
+                out.append(f"{fn.__name__}:{node.lineno}: "
+                           f"references {node.id!r}")
+            self.generic_visit(node)
+
+        def visit_Attribute(self, node):
+            # os.environ, np.random, os.urandom, os.getenv
+            base = node.value.id if isinstance(node.value, ast.Name) else ""
+            if (base, node.attr) in {("os", "environ"), ("os", "getenv"),
+                                     ("os", "urandom"), ("np", "random"),
+                                     ("numpy", "random")}:
+                out.append(f"{fn.__name__}:{node.lineno}: "
+                           f"reads {base}.{node.attr}")
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in _BANNED_CALLS:
+                out.append(f"{fn.__name__}:{node.lineno}: calls {f.id}()")
+            self.generic_visit(node)
+
+        # ---- dict-order-dependent iteration ------------------------------
+        def _iter_is_impure(self, it):
+            """True for a bare d.items()/keys()/values() iterator."""
+            return (isinstance(it, ast.Call)
+                    and isinstance(it.func, ast.Attribute)
+                    and it.func.attr in _DICT_ITERS)
+
+        def _check_iter(self, it, what):
+            if self._iter_is_impure(it):
+                out.append(f"{fn.__name__}:{it.lineno}: {what} over bare "
+                           f".{it.func.attr}() — wrap in sorted()")
+
+        def visit_For(self, node):
+            self._check_iter(node.iter, "for-loop")
+            self.generic_visit(node)
+
+        def visit_comprehension(self, node):
+            self._check_iter(node.iter, "comprehension")
+            for child in ast.iter_child_nodes(node):
+                self.visit(child)
+
+    V().visit(tree)
+    return out
+
+
+@pytest.mark.parametrize("fn", LINTED, ids=lambda f: f.__qualname__)
+def test_cache_keyed_paths_are_pure(fn):
+    assert _violations(fn) == []
+
+
+# ---------------------------------------------------------------------------
+# the lint itself must catch what it claims to catch
+# ---------------------------------------------------------------------------
+
+def _planted_time():
+    import time
+    return time.time()
+
+
+def _planted_env():
+    import os
+    return os.environ.get("HOME")
+
+
+def _planted_hash(x):
+    return hash(x)
+
+
+def _planted_dict_iter(d):
+    return [k for k, v in d.items()]
+
+
+def _planted_sorted_ok(d):
+    # sorted() pins the order — this is canonical()'s own idiom
+    return [k for k, v in sorted(d.items())]
+
+
+def test_lint_self_check():
+    assert _violations(_planted_time)
+    assert _violations(_planted_env)
+    assert _violations(_planted_hash)
+    assert _violations(_planted_dict_iter)
+    assert _violations(_planted_sorted_ok) == []
+
+
+def test_canonical_sorts_dicts():
+    """Behavioral twin of the AST rule: two dicts with different insertion
+    orders must canonicalize (and key) identically."""
+    a = {"x": 1, "y": [2, 3], "z": {"k": 4}}
+    b = {"z": {"k": 4}, "y": [2, 3], "x": 1}
+    assert result_cache.canonical(a) == result_cache.canonical(b)
+    assert result_cache.content_key(a) == result_cache.content_key(b)
