@@ -33,7 +33,8 @@ def main(argv=None) -> None:
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
                    mapper_speed, planner_archs, precision_sweep,
-                   schedule_overlap, serving_sim, study_speed, verify_lint)
+                   schedule_overlap, serving_sim, study_speed,
+                   unitcheck_speed, verify_lint)
 
     if args.quick:
         modules = [
@@ -46,6 +47,7 @@ def main(argv=None) -> None:
             ("precision_sweep", precision_sweep, {"quick": True}),
             ("schedule_overlap", schedule_overlap, {"quick": True}),
             ("verify_lint", verify_lint, {"quick": True}),
+            ("unitcheck_speed", unitcheck_speed, {"quick": True}),
         ]
     else:
         modules = [
@@ -62,6 +64,7 @@ def main(argv=None) -> None:
             ("precision_sweep", precision_sweep, {}),
             ("schedule_overlap", schedule_overlap, {}),
             ("verify_lint", verify_lint, {}),
+            ("unitcheck_speed", unitcheck_speed, {}),
         ]
 
     print("name,us_per_call,derived")

@@ -55,7 +55,8 @@ def _cases(quick: bool = False):
     wl = dict(list(WORKLOADS.items())[:2]) if quick else WORKLOADS
     return [Case(hw.make_system(hw.compute_design(d), 4, 600, "fc"),
                  get_config(m), PLAN, w, label=f"{d}/{m}/{name}")
-            for d in designs for m in models for name, w in wl.items()]
+            for d in designs for m in models
+            for name, w in sorted(wl.items())]
 
 
 def _generate(case, evaluator):

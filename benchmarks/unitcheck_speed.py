@@ -1,0 +1,69 @@
+"""Dimensional-analysis pass over the shipped tree: correctness + speed.
+
+Three claims are checked:
+
+  * `python -m repro.unitcheck src/repro/core` (the CI gate) reports zero
+    diagnostics on the shipped pricing core;
+  * every registered rule fires on its built-in sample mutant
+    (`registry_selfcheck` — the same proof the mutant test suite runs);
+  * a full-tree pass (src/repro/core + benchmarks + examples parsed
+    together) stays under 10 seconds, so the gate never becomes the slow
+    step of CI. The whole-tree figure is the honest upper bound: the
+    checker's two-pass design re-reads every file per invocation, there is
+    no incremental mode to hide behind.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from repro.core import unitcheck
+
+from .common import emit
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+_CORE = _ROOT / "src" / "repro" / "core"
+
+
+def run(quick: bool = False) -> dict:
+    # ---- the CI gate: shipped core is clean ------------------------------
+    t0 = time.perf_counter()
+    diags = unitcheck.check_paths([str(_CORE)])
+    dt_core = time.perf_counter() - t0
+    errors = [d for d in diags if d.severity == "error"]
+    emit("unitcheck/core", dt_core * 1e6,
+         f"diags={len(diags)};errors={len(errors)};rules={len(unitcheck.RULES)}")
+
+    # ---- every rule proves itself on its sample mutant -------------------
+    t0 = time.perf_counter()
+    per_rule = unitcheck.registry_diagnostics()
+    dt_self = time.perf_counter() - t0
+    uncaught = sorted(r for r, ds in per_rule.items() if not ds)
+    emit("unitcheck/selfcheck", dt_self * 1e6,
+         f"rules={len(per_rule)};uncaught={len(uncaught)}")
+
+    # ---- full-tree speed: core + benchmarks + examples in one table ------
+    targets = [str(_CORE), str(_ROOT / "src" / "repro"),
+               str(_ROOT / "benchmarks"), str(_ROOT / "examples")]
+    t0 = time.perf_counter()
+    tree_diags = unitcheck.check_paths(targets)
+    dt_tree = time.perf_counter() - t0
+    tree_errors = [d for d in tree_diags if d.severity == "error"]
+    emit("unitcheck/full_tree", dt_tree * 1e6,
+         f"seconds={dt_tree:.3f};diags={len(tree_diags)};"
+         f"errors={len(tree_errors)}")
+
+    return {
+        "core_diags": len(diags),
+        "core_clean": not errors,
+        "rules_total": len(unitcheck.RULES),
+        "all_rules_fire": not uncaught,
+        "tree_errors": len(tree_errors),
+        "tree_clean": not tree_errors,
+        "tree_seconds": round(dt_tree, 3),
+        "tree_under_10s": dt_tree < 10.0,
+    }
+
+
+if __name__ == "__main__":
+    print("CHECKS:", run())

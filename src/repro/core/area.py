@@ -17,12 +17,13 @@ from dataclasses import dataclass, field
 
 from .hardware import Device, MB
 from .precision import DTYPES
+from .units import Mm2
 
-UM2 = 1e-6   # um^2 -> mm^2
+UM2: Mm2 = 1e-6   # mm^2 per um^2
 
 # --- Table II constants (7nm) ----------------------------------------------
-AREA_FP64_FPU = 7116 * UM2
-AREA_FP32_FPU = AREA_FP64_FPU / 2          # half-width datapath
+AREA_FP64_FPU: Mm2 = 7116 * UM2
+AREA_FP32_FPU: Mm2 = AREA_FP64_FPU / 2     # half-width datapath
 
 # Systolic PE area, per native datapath dtype (ISSUE 4). The fp16 MAC is
 # THE calibrated constant: together with the fabric constant below it makes
@@ -40,35 +41,35 @@ MAC_UM2_FP16 = 1150
 MAC_AREA = {name: d.mac_area_rel * MAC_UM2_FP16 * UM2
             for name, d in DTYPES.items()}
 AREA_FP16_MAC = MAC_AREA["fp16"]           # back-compat alias
-AREA_INT32_ALU = 1838 * UM2
-AREA_LANE_OVERHEAD = 10344 * UM2
-AREA_CORE_OVERHEAD = 460000 * UM2          # Table II per-core overhead
-AREA_CORE_FABRIC = 1450000 * UM2           # calibrated crossbar/uncore share
-AREA_HBM2E_CTRL_1024 = 5740000 * UM2       # per 1024-bit channel (scales w/ node)
-AREA_HBM2E_PHY_1024 = 10450000 * UM2       # per 1024-bit channel (analog, fixed)
+AREA_INT32_ALU: Mm2 = 1838 * UM2
+AREA_LANE_OVERHEAD: Mm2 = 10344 * UM2
+AREA_CORE_OVERHEAD: Mm2 = 460000 * UM2     # Table II per-core overhead
+AREA_CORE_FABRIC: Mm2 = 1450000 * UM2      # calibrated crossbar/uncore share
+AREA_HBM2E_CTRL_1024: Mm2 = 5740000 * UM2  # per 1024-bit channel (scales w/ node)
+AREA_HBM2E_PHY_1024: Mm2 = 10450000 * UM2  # per 1024-bit channel (analog, fixed)
 
 # --- fitted memory-macro curves (documented calibration) -------------------
-SRAM_LOCAL_MM2_PER_MB = 2.0    # high-port L1/LDS-class SRAM @ 7nm (CACTI-fit)
-SRAM_GLOBAL_MM2_PER_MB = 1.2   # dense L2-class SRAM @ 7nm
-REGFILE_MM2_PER_MB = 4.0       # multi-ported RF (EMPIRE-fit)
+SRAM_LOCAL_MM2_PER_MB: Mm2 = 2.0   # high-port L1/LDS SRAM @ 7nm (CACTI-fit)
+SRAM_GLOBAL_MM2_PER_MB: Mm2 = 1.2  # dense L2-class SRAM @ 7nm
+REGFILE_MM2_PER_MB: Mm2 = 4.0      # multi-ported RF (EMPIRE-fit)
 HBM_GBPS_PER_STACK = 400.0     # HBM2e per-1024b-stack bandwidth (~3.2 Gbps/pin)
-DDR_PHY_MM2_PER_CH = 0.18      # PCIe5/DDR channel PHY+ctrl (perimeter IO)
+DDR_PHY_MM2_PER_CH: Mm2 = 0.18     # PCIe5/DDR channel PHY+ctrl (perimeter IO)
 DDR_GBPS_PER_CH = 4.0          # ~PCIe 5.0 x1 effective
-LINK_PHY_MM2_PER_GBPS = 49.0 / 600.0   # NVLink-class SerDes (Table IV fit)
+LINK_PHY_MM2_PER_GBPS: Mm2 = 49.0 / 600.0  # NVLink SerDes (Table IV fit)
 
 
 @dataclass
 class AreaReport:
-    lane_mm2: float
-    core_mm2: float
-    cores_total_mm2: float
-    global_buffer_mm2: float
-    memory_io_mm2: float
-    link_phy_mm2: float
+    lane_mm2: Mm2
+    core_mm2: Mm2
+    cores_total_mm2: Mm2
+    global_buffer_mm2: Mm2
+    memory_io_mm2: Mm2
+    link_phy_mm2: Mm2
     breakdown: dict = field(default_factory=dict)
 
     @property
-    def total_mm2(self) -> float:
+    def total_mm2(self) -> Mm2:
         return (self.cores_total_mm2 + self.global_buffer_mm2
                 + self.memory_io_mm2 + self.link_phy_mm2)
 
@@ -92,23 +93,24 @@ def _lane_parts(device: Device) -> dict:
     }
 
 
-def lane_area(device: Device) -> float:
+def lane_area(device: Device) -> Mm2:
     return sum(_lane_parts(device).values())
 
 
-def core_area(device: Device) -> float:
+def core_area(device: Device) -> Mm2:
     lanes = device.core.lanes * lane_area(device)
     local = (device.core.local_buffer_bytes / MB) * SRAM_LOCAL_MM2_PER_MB
     return lanes + local + AREA_CORE_OVERHEAD + AREA_CORE_FABRIC
 
 
-def device_area(device: Device, link_bandwidth_gbps: float = 600.0) -> AreaReport:
-    la = lane_area(device)
-    ca = core_area(device)
-    cores = device.core_count * ca
-    gb = (device.global_buffer_bytes / MB) * SRAM_GLOBAL_MM2_PER_MB
+def device_area(device: Device,
+                link_bandwidth_gbps: float = 600.0) -> AreaReport:
+    la: Mm2 = lane_area(device)
+    ca: Mm2 = core_area(device)
+    cores: Mm2 = device.core_count * ca
+    gb: Mm2 = (device.global_buffer_bytes / MB) * SRAM_GLOBAL_MM2_PER_MB
 
-    mem_io = 0.0
+    mem_io: Mm2 = 0.0
     if device.main_memory is not None:
         bw_gbps = device.main_memory.bandwidth_bytes / 1e9
         if "HBM" in device.main_memory.protocol.upper():

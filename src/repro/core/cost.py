@@ -14,23 +14,24 @@ import math
 from dataclasses import dataclass
 
 from .hardware import Device, GB
+from .units import Dollars, Mm2, Ratio
 
-WAFER_COST_7NM_USD = 9346.0          # TSMC N7, public supply-chain estimate
+WAFER_COST_7NM_USD: Dollars = 9346.0  # TSMC N7, public supply-chain estimate
 WAFER_DIAMETER_MM = 300.0
 DEFECT_DENSITY_PER_MM2 = 0.001       # ~0.1 defects/cm^2 (mature N7)
-SALVAGE_YIELD = 0.90                 # binning recovers most defective dies
-HBM_USD_PER_GB = 7.0
-DDR_USD_PER_GB = 0.30
+SALVAGE_YIELD: Ratio = 0.90          # binning recovers most defective dies
+HBM_USD_PER_GB: Dollars = 7.0        # per GB of HBM2e
+DDR_USD_PER_GB: Dollars = 0.30       # per GB of DDR5
 
 
-def dies_per_wafer(die_area_mm2: float) -> int:
+def dies_per_wafer(die_area_mm2: Mm2) -> int:
     """Standard DPW geometry: area term minus edge-loss term."""
     d = WAFER_DIAMETER_MM
     return int(math.pi * (d / 2) ** 2 / die_area_mm2
                - math.pi * d / math.sqrt(2.0 * die_area_mm2))
 
 
-def die_yield(die_area_mm2: float, salvage: bool = True) -> float:
+def die_yield(die_area_mm2: Mm2, salvage: bool = True) -> Ratio:
     """Poisson defect yield; salvage floors it for redundancy-binned designs."""
     y = math.exp(-DEFECT_DENSITY_PER_MM2 * die_area_mm2)
     if salvage:
@@ -38,12 +39,12 @@ def die_yield(die_area_mm2: float, salvage: bool = True) -> float:
     return y
 
 
-def die_cost(die_area_mm2: float, salvage: bool = True) -> float:
+def die_cost(die_area_mm2: Mm2, salvage: bool = True) -> Dollars:
     dpw = dies_per_wafer(die_area_mm2)
     return WAFER_COST_7NM_USD / (dpw * die_yield(die_area_mm2, salvage))
 
 
-def memory_cost(device: Device) -> float:
+def memory_cost(device: Device) -> Dollars:
     if device.main_memory is None:
         return 0.0
     gb = device.main_memory.capacity_bytes / GB
@@ -54,16 +55,16 @@ def memory_cost(device: Device) -> float:
 
 @dataclass
 class CostReport:
-    die_area_mm2: float
-    die_cost_usd: float
-    memory_cost_usd: float
+    die_area_mm2: Mm2
+    die_cost_usd: Dollars
+    memory_cost_usd: Dollars
 
     @property
-    def total_usd(self) -> float:
+    def total_usd(self) -> Dollars:
         return self.die_cost_usd + self.memory_cost_usd
 
 
-def device_cost(device: Device, die_area_mm2: float) -> CostReport:
+def device_cost(device: Device, die_area_mm2: Mm2) -> CostReport:
     return CostReport(die_area_mm2=die_area_mm2,
                       die_cost_usd=die_cost(die_area_mm2),
                       memory_cost_usd=memory_cost(device))

@@ -38,6 +38,7 @@ from typing import List, Optional, Tuple
 
 from .ir import (ElementwiseSpec, FusedMatmulSpec, Graph, MatmulSpec, Node,
                  NormSpec, OpSpec, SoftmaxSpec)
+from .units import Bytes, BytesPerElement, Elements
 
 
 @dataclass(frozen=True)
@@ -89,7 +90,7 @@ def fusion_tag(policy: FusionPolicy) -> str:
 # pattern matching helpers
 # ---------------------------------------------------------------------------
 
-def _out_elems(spec: OpSpec) -> Optional[float]:
+def _out_elems(spec: OpSpec) -> Optional[Elements]:
     """Elements the node's output tensor holds (None: not fusible over)."""
     if isinstance(spec, MatmulSpec):
         return float(spec.batch * spec.m * spec.n)
@@ -102,7 +103,7 @@ def _out_elems(spec: OpSpec) -> Optional[float]:
     return None
 
 
-def _in_elems(spec: OpSpec) -> Optional[float]:
+def _in_elems(spec: OpSpec) -> Optional[Elements]:
     """Elements the node reads from its (sole) producer tensor."""
     if isinstance(spec, (SoftmaxSpec, NormSpec)):
         return float(spec.rows * spec.cols)
@@ -112,7 +113,7 @@ def _in_elems(spec: OpSpec) -> Optional[float]:
     return None
 
 
-def _out_write_bytes(spec: OpSpec) -> float:
+def _out_write_bytes(spec: OpSpec) -> Bytes:
     """Bytes the epilogue's output tensor writes to main memory."""
     if isinstance(spec, (SoftmaxSpec, NormSpec)):
         return spec.rows * spec.cols * spec.bytes_out
@@ -125,12 +126,13 @@ def _epilogue_ok(spec: OpSpec) -> bool:
     return isinstance(spec, (SoftmaxSpec, NormSpec, ElementwiseSpec))
 
 
-def _rescaled(gemm: MatmulSpec, out_bytes: float) -> MatmulSpec:
+def _rescaled(gemm: MatmulSpec, out_bytes: Bytes) -> MatmulSpec:
     """The effective mapper shape once the kernel writes `out_bytes` instead
     of its own C tensor (byte widths are per-element multipliers, so the
     rescale is exact even for fractional widths)."""
-    c_elems = gemm.batch * gemm.m * gemm.n
-    return replace(gemm, bytes_out=out_bytes / c_elems if c_elems else 0.0)
+    c_elems: Elements = gemm.batch * gemm.m * gemm.n
+    width: BytesPerElement = out_bytes / c_elems if c_elems else 0.0
+    return replace(gemm, bytes_out=width)
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +228,7 @@ def fuse(graph: Graph, policy: FusionPolicy = SERIAL) -> Graph:
                        for nd, deps in kept))
 
 
-def _in_read_bytes(spec: OpSpec) -> float:
+def _in_read_bytes(spec: OpSpec) -> Bytes:
     """Bytes the epilogue op would read from main memory when not fused."""
     if isinstance(spec, (SoftmaxSpec, NormSpec)):
         return spec.rows * spec.cols * spec.bytes_in
@@ -236,13 +238,13 @@ def _in_read_bytes(spec: OpSpec) -> float:
     raise TypeError(f"not an epilogue spec: {type(spec).__name__}")
 
 
-def elided_bytes(graph: Graph, fused: Graph) -> float:
+def elided_bytes(graph: Graph, fused: Graph) -> Bytes:
     """Main-memory traffic the fusion rewrite removed, by spec accounting
     (producer output writes + epilogue input reads + streamed outputs).
     Reported by benchmarks; the evaluator's per-kernel totals are the
     ground truth (the mapper may also re-tile the cheaper fused shape)."""
-    def graph_io(g: Graph) -> float:
-        total = 0.0
+    def graph_io(g: Graph) -> Bytes:
+        total: Bytes = 0.0
         for node in g:
             s = node.spec
             if isinstance(s, FusedMatmulSpec):

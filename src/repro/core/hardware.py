@@ -15,9 +15,12 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Optional
 
-KB = 1024
-MB = 1024 * KB
-GB = 1024 * MB
+from .units import (Bytes, BytesPerCycle, BytesPerSecond, FlopsPerCycle,
+                    FlopsPerSecond, Hertz, Ratio, Seconds)
+
+KB: Bytes = 1024
+MB: Bytes = 1024 * KB
+GB: Bytes = 1024 * MB
 
 
 @dataclass(frozen=True)
@@ -38,45 +41,45 @@ class SystolicArray:
 class VectorUnit:
     width: int                      # MACs (or ALU ops) per cycle per lane
     # fraction of peak usable for reductions / special functions (exp, rsqrt)
-    special_ratio: float = 1.0 / 4.0
+    special_ratio: Ratio = 1.0 / 4.0
 
 
 @dataclass(frozen=True)
 class Lane:
     vector_unit: VectorUnit
     systolic_array: SystolicArray
-    register_file_bytes: int = 256 * KB
+    register_file_bytes: Bytes = 256 * KB
 
 
 @dataclass(frozen=True)
 class Core:
     lanes: int
     lane: Lane
-    local_buffer_bytes: int         # shared among lanes (L1 / LDS / VMEM)
+    local_buffer_bytes: Bytes       # shared among lanes (L1 / LDS / VMEM)
     # sustained local-buffer bandwidth in bytes/cycle (paper models buffers as
     # wide SRAM; per-core figure)
-    local_buffer_bw_per_cycle: int = 128
+    local_buffer_bw_per_cycle: BytesPerCycle = 128
 
 
 @dataclass(frozen=True)
 class MainMemory:
-    bandwidth_bytes: float          # bytes / second
-    capacity_bytes: float
+    bandwidth_bytes: BytesPerSecond
+    capacity_bytes: Bytes
     protocol: str = "HBM2e"
 
 
 @dataclass(frozen=True)
 class Device:
     name: str
-    frequency_hz: float
+    frequency_hz: Hertz
     core_count: int
     core: Core
-    global_buffer_bytes: int
-    global_buffer_bw_per_cycle: int  # bytes / clk (paper Table I)
+    global_buffer_bytes: Bytes
+    global_buffer_bw_per_cycle: BytesPerCycle  # bytes / clk (paper Table I)
     main_memory: Optional[MainMemory]
     # measured per-kernel launch + framework overhead (paper Sec. III-C:
     # "measured by running the operator with an input of size 1")
-    kernel_launch_overhead_s: float = 4.5e-6
+    kernel_launch_overhead_s: Seconds = 4.5e-6
     process_node_nm: int = 7
 
     # --- derived peak numbers -------------------------------------------------
@@ -85,24 +88,24 @@ class Device:
         return self.core_count * self.core.lanes
 
     @property
-    def matmul_flops_per_cycle(self) -> int:
+    def matmul_flops_per_cycle(self) -> FlopsPerCycle:
         """2 flops per MAC, all systolic arrays."""
         return 2 * self.total_lanes * self.core.lane.systolic_array.macs
 
     @property
-    def vector_flops_per_cycle(self) -> int:
+    def vector_flops_per_cycle(self) -> FlopsPerCycle:
         return 2 * self.total_lanes * self.core.lane.vector_unit.width
 
     @property
-    def peak_matmul_flops(self) -> float:
+    def peak_matmul_flops(self) -> FlopsPerSecond:
         return self.matmul_flops_per_cycle * self.frequency_hz
 
     @property
-    def peak_vector_flops(self) -> float:
+    def peak_vector_flops(self) -> FlopsPerSecond:
         return self.vector_flops_per_cycle * self.frequency_hz
 
     @property
-    def memory_bandwidth(self) -> float:
+    def memory_bandwidth(self) -> BytesPerSecond:
         """Bandwidth to the level that backs the global buffer.
 
         For GPU-style devices this is main-memory (HBM/DDR) bandwidth. For the
@@ -114,24 +117,24 @@ class Device:
         return self.global_buffer_bw_per_cycle * self.frequency_hz
 
     @property
-    def memory_capacity(self) -> float:
+    def memory_capacity(self) -> Bytes:
         if self.main_memory is not None:
             return self.main_memory.capacity_bytes
         return float(self.global_buffer_bytes)
 
     @property
-    def global_buffer_bandwidth(self) -> float:
+    def global_buffer_bandwidth(self) -> BytesPerSecond:
         return self.global_buffer_bw_per_cycle * self.frequency_hz
 
 
 @dataclass(frozen=True)
 class Link:
     """LogGP-style link (paper Sec. III-B2, Eq. 1-2)."""
-    bandwidth_bytes: float          # B
-    latency_s: float = 8.0e-6      # L
-    overhead_s: float = 1.0e-6     # O
-    flit_bytes: int = 16            # NVLink flit
-    max_payload_bytes: int = 256    # NVLink max payload
+    bandwidth_bytes: BytesPerSecond  # B
+    latency_s: Seconds = 8.0e-6     # L
+    overhead_s: Seconds = 1.0e-6    # O
+    flit_bytes: Bytes = 16          # NVLink flit
+    max_payload_bytes: Bytes = 256  # NVLink max payload
 
 
 @dataclass(frozen=True)

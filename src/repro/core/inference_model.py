@@ -24,17 +24,18 @@ from .fusion import SERIAL, FusionPolicy, fuse
 from .hardware import System
 from .graph import LayerCost, Plan, build_model
 from .precision import DEFAULT, PrecisionPolicy
+from .units import Bytes, Flops, PerSecond, Seconds
 from . import interconnect as net
 
 
 @dataclass
 class PerfReport:
-    latency: float
-    flops: float
-    bytes: float
+    latency: Seconds
+    flops: Flops
+    bytes: Bytes
     breakdown: Dict[str, float] = field(default_factory=dict)
     bound: Dict[str, float] = field(default_factory=dict)
-    serial_latency: float = 0.0     # no-overlap sum (== latency when serial)
+    serial_latency: Seconds = 0.0   # no-overlap sum (== latency when serial)
     schedule: object = None         # per-op timeline (overlap mode, 1 graph)
 
     @property
@@ -64,7 +65,7 @@ def _evaluator(system: System, evaluator: Optional[Evaluator],
 
 
 def pp_fill(system: System, plan: Plan, tokens: int, d_model: int,
-            policy: PrecisionPolicy = DEFAULT) -> float:
+            policy: PrecisionPolicy = DEFAULT) -> Seconds:
     """Pipeline fill: (pp-1) p2p activation hand-offs for the first batch.
 
     Public (ISSUE 3): the serving simulator prices its prefill waves and
@@ -86,7 +87,7 @@ def prefill(system: System, cfg: ModelConfig, plan: Plan, batch: int,
                                         policy=policy), fusion),
                        overlap=fusion.overlap)
     rep = _report(cost)
-    fill = pp_fill(system, plan, batch * seq, cfg.d_model, policy)
+    fill: Seconds = pp_fill(system, plan, batch * seq, cfg.d_model, policy)
     rep.latency += fill
     rep.serial_latency += fill
     return rep
@@ -102,7 +103,7 @@ def decode_step(system: System, cfg: ModelConfig, plan: Plan, batch: int,
                             fusion),
                        overlap=fusion.overlap)
     rep = _report(cost)
-    fill = pp_fill(system, plan, batch, cfg.d_model, policy)
+    fill: Seconds = pp_fill(system, plan, batch, cfg.d_model, policy)
     rep.latency += fill
     rep.serial_latency += fill
     return rep
@@ -147,10 +148,11 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
     costs = ev.evaluate_many(graphs, overlap=fusion.overlap)
 
     pf = _report(costs[0])
-    pf_fill = pp_fill(system, plan, batch * in_len, cfg.d_model, policy)
+    pf_fill: Seconds = pp_fill(system, plan, batch * in_len, cfg.d_model,
+                               policy)
     pf.latency += pf_fill
     pf.serial_latency += pf_fill
-    dec_fill = pp_fill(system, plan, batch, cfg.d_model, policy)
+    dec_fill: Seconds = pp_fill(system, plan, batch, cfg.d_model, policy)
     lats = [c.latency + dec_fill for c in costs[1:]]
     # the no-overlap pricing of the same graphs, integrated identically so
     # PerfReport.serial_latency stays meaningful for the whole generation
@@ -204,7 +206,7 @@ def generate(system: System, cfg: ModelConfig, plan: Plan, batch: int,
 
 def memory_per_device(cfg: ModelConfig, plan: Plan, batch: int,
                       max_len: int,
-                      policy: PrecisionPolicy = DEFAULT) -> float:
+                      policy: PrecisionPolicy = DEFAULT) -> Bytes:
     """Resident bytes per device under the planner memory model.
 
     The precision policy is the single source of truth for byte widths
@@ -270,7 +272,7 @@ def throughput(system: System, cfg: ModelConfig, plan: Plan, batch: int,
                in_len: int, out_len: int,
                evaluator: Optional[Evaluator] = None,
                policy: PrecisionPolicy = DEFAULT,
-               fusion: FusionPolicy = SERIAL) -> float:
+               fusion: FusionPolicy = SERIAL) -> PerSecond:
     """Output tokens / second for the whole system (pipeline-full steady
     state: pp stages each process different microbatches concurrently)."""
     g = generate(system, cfg, plan, batch, in_len, out_len,
@@ -279,7 +281,7 @@ def throughput(system: System, cfg: ModelConfig, plan: Plan, batch: int,
 
 
 def throughput_from_generate(g: PerfReport, plan: Plan, batch: int,
-                             out_len: int) -> float:
+                             out_len: int) -> PerSecond:
     """Derive steady-state throughput from an existing generate() report
     (saves the planner a second full-model walk per plan)."""
     toks = batch * out_len * plan.dp

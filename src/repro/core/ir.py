@@ -31,6 +31,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Iterable, Iterator, List, Optional, Tuple, Union
 
+from .units import Bytes, BytesPerElement, Elements, FlopsPerElement, Ratio
+
 
 @dataclass(frozen=True)
 class MatmulSpec:
@@ -49,17 +51,16 @@ class MatmulSpec:
     k: int
     n: int
     batch: int = 1
-    bytes_a: Union[int, float] = 2
-    bytes_b: Union[int, float] = 2
-    bytes_out: Union[int, float] = 2
-    bytes_acc: Union[int, float] = 2
+    bytes_a: BytesPerElement = 2
+    bytes_b: BytesPerElement = 2
+    bytes_out: BytesPerElement = 2
+    bytes_acc: BytesPerElement = 2
     b_shared: bool = False
-    mac_scale: float = 1.0
+    mac_scale: Ratio = 1.0
 
     @property
-    def shape(self) -> Tuple[int, int, int, int, Union[int, float],
-                             Union[int, float], Union[int, float],
-                             Union[int, float], bool, float]:
+    def shape(self) -> Tuple[int, int, int, int, float, float, float,
+                             float, bool, float]:
         """The mapper's MatmulShape tuple for this spec."""
         return (self.m, self.k, self.n, self.batch, self.bytes_a,
                 self.bytes_b, self.bytes_out, self.bytes_acc, self.b_shared,
@@ -71,8 +72,8 @@ class SoftmaxSpec:
     """Row-wise online softmax over (rows, cols)."""
     rows: int
     cols: int
-    bytes_in: Union[int, float] = 2
-    bytes_out: Union[int, float] = 2
+    bytes_in: BytesPerElement = 2
+    bytes_out: BytesPerElement = 2
 
 
 @dataclass(frozen=True)
@@ -81,8 +82,8 @@ class NormSpec:
     kind: str                       # "layernorm" | "rmsnorm"
     rows: int
     cols: int
-    bytes_in: Union[int, float] = 2
-    bytes_out: Union[int, float] = 2
+    bytes_in: BytesPerElement = 2
+    bytes_out: BytesPerElement = 2
 
 
 @dataclass(frozen=True)
@@ -91,10 +92,10 @@ class ElementwiseSpec:
     "gelu" (tanh approx), "silu_mul" (SwiGLU gate, 2 inputs), or "generic"
     (flops_per_elt flops, n_in operand streams)."""
     kind: str                       # "generic" | "gelu" | "silu_mul"
-    n_elements: int
-    flops_per_elt: float = 1.0
+    n_elements: Elements
+    flops_per_elt: FlopsPerElement = 1.0
     n_in: int = 1
-    bytes_elt: Union[int, float] = 2
+    bytes_elt: BytesPerElement = 2
 
 
 @dataclass(frozen=True)
@@ -105,7 +106,7 @@ class ScanSpec:
     batch: int
     d_state: float
     flops_per_step: float
-    bytes_io: float
+    bytes_io: Bytes
     chunk: int = 128
 
 
@@ -121,15 +122,15 @@ class CollectiveSpec:
     (n_bytes / bytes_elt adds) instead of assuming 2-byte elements.
     """
     kind: str     # "all_reduce" | "reduce_scatter" | "all_gather" | "all_to_all" | "p2p"
-    n_bytes: float
+    n_bytes: Bytes
     n_devices: int = 0              # 0 -> whole system
-    bytes_elt: Union[int, float] = 2
+    bytes_elt: BytesPerElement = 2
 
 
 @dataclass(frozen=True)
 class TrafficSpec:
     """Pure main-memory data movement (KV append, embedding gather)."""
-    n_bytes: float
+    n_bytes: Bytes
 
 
 @dataclass(frozen=True)

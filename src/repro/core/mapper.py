@@ -51,13 +51,14 @@ import os
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, cast
 
 import numpy as np
 
 from .hardware import Device
 from .result_cache import MODEL_VERSION, DiskCache, content_key
 from .systolic import gemm_cycles_array
+from .units import Bytes, Flops, Seconds
 
 
 @dataclass(frozen=True)
@@ -72,8 +73,8 @@ class Mapping:
     scheme: int                  # 1: output-parallel, 2: k-split + reduce
     double_buffer_l2: bool
     double_buffer_l1: bool
-    compute_time: float
-    memory_time: float
+    compute_time: Seconds
+    memory_time: Seconds
 
     @property
     def bound(self) -> str:
@@ -82,9 +83,9 @@ class Mapping:
 
 @dataclass(frozen=True)
 class MatmulResult:
-    latency: float               # seconds, excluding kernel launch overhead
-    flops: int
-    main_memory_bytes: int
+    latency: Seconds             # excluding kernel launch overhead
+    flops: Flops
+    main_memory_bytes: Bytes
     mapping: Mapping
     candidates_searched: int
 
@@ -122,7 +123,8 @@ def _tile_candidates(dim: int, align: int, max_tiles: int = 12) -> np.ndarray:
 _DB_OPTIONS = ((0, 0), (0, 1), (1, 0), (1, 1))
 
 
-def _candidate_rows(dev: Device, shape: MatmulShape):
+def _candidate_rows(dev: Device, shape: MatmulShape
+                    ) -> Tuple[Tuple[Any, ...], Any, int]:
     """Feasible (tile, subtile) pairs for one GEMM shape, in dense-search
     order (level-2 index major, level-1 minor). Returns the gathered flat
     candidate arrays plus per-pipeline validity columns."""
@@ -166,7 +168,8 @@ def _candidate_rows(dev: Device, shape: MatmulShape):
 
 
 def _gather_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
-                  rows: Sequence, p_oks: Sequence) -> Dict:
+                  rows: Sequence[Any], p_oks: Sequence[Any]
+                  ) -> Dict[str, Any]:
     """Concatenate the feasible candidates of several (device, shape) pairs
     into flat per-row arrays — the backend-independent input of the chunk
     evaluation. Device and shape scalars are gathered per candidate row;
@@ -176,7 +179,7 @@ def _gather_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
     counts = [r[0].size for r in rows]
     offs = np.concatenate([[0], np.cumsum(counts)])
 
-    def dscal(vals, dtype=np.int64):
+    def dscal(vals: Sequence[Any], dtype: Any = np.int64) -> Any:
         if len(set(vals)) == 1:
             return vals[0]
         return np.concatenate([np.full(c, v, dtype=dtype)
@@ -184,7 +187,7 @@ def _gather_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
 
     # per-row gathered shape scalars (byte widths promote to float64 only
     # when a sub-byte width appears, keeping the default path on exact int64)
-    def scal(idx, dtype=np.int64):
+    def scal(idx: int, dtype: Any = np.int64) -> Any:
         vals = [s[idx] for s in shapes]
         if dtype is np.int64 and any(v != int(v) for v in vals):
             dtype = np.float64
@@ -216,7 +219,7 @@ def _gather_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
     }
 
 
-def _chunk_tables_numpy(g: Dict) -> Dict:
+def _chunk_tables_numpy(g: Dict[str, Any]) -> Dict[str, Any]:
     """The numpy backend: evaluate every candidate row of a gathered chunk.
 
     Returns the per-row tables the winner pick reads: `totals` [rows, p]
@@ -313,8 +316,9 @@ def _chunk_tables_numpy(g: Dict) -> Dict:
             "n_t_m": n_t_m, "n_t_n": n_t_n, "n_t_k": n_t_k}
 
 
-def _pick_winners(g: Dict, t: Dict, devs: Sequence[Device],
-                  shapes: Sequence[MatmulShape]) -> List[Tuple]:
+def _pick_winners(g: Dict[str, Any], t: Dict[str, Any],
+                  devs: Sequence[Device],
+                  shapes: Sequence[MatmulShape]) -> List[Tuple[Any, ...]]:
     """Select each pair's best candidate from the chunk tables (backend-
     independent: pure numpy over the returned tables)."""
     offs = g["offs"]
@@ -324,7 +328,7 @@ def _pick_winners(g: Dict, t: Dict, devs: Sequence[Device],
     steps, step_mem_t, c_total_t = t["steps"], t["step_mem_t"], t["c_total_t"]
     n_t_m, n_t_n, n_t_k = t["n_t_m"], t["n_t_n"], t["n_t_k"]
 
-    out = []
+    out: List[Tuple[Any, ...]] = []
     for s, shape in enumerate(shapes):
         lo, hi = int(offs[s]), int(offs[s + 1])
         seg = totals[lo:hi]
@@ -357,7 +361,8 @@ def _pick_winners(g: Dict, t: Dict, devs: Sequence[Device],
 
 
 def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
-                 rows: Sequence, p_oks: Sequence) -> List[Tuple]:
+                 rows: Sequence[Any], p_oks: Sequence[Any]
+                 ) -> List[Tuple[Any, ...]]:
     """Evaluate the concatenated feasible candidates of several (device,
     shape) pairs in one broadcast and pick each pair's winner. Returns
     per-pair winner tuples. `devs[i]` is the device of `shapes[i]`."""
@@ -369,7 +374,7 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
     return _pick_winners(g, tables, devs, shapes)
 
 
-def _jax_tables(g: Dict) -> Dict:
+def _jax_tables(g: Dict[str, Any]) -> Dict[str, Any]:
     """Dispatch to the JAX backend, falling back to numpy (once, loudly)
     when jax is unavailable in this environment."""
     global _BACKEND
@@ -450,7 +455,7 @@ _STATS = MapperCacheStats()
 # batched entry points, so independent Evaluators never re-search a shape.
 # Bounded LRU: at capacity the least-recently-used entry is evicted (the
 # seed's dict silently stopped inserting instead — every later shape missed).
-_MM_CACHE: "OrderedDict[tuple, MatmulResult]" = OrderedDict()
+_MM_CACHE: "OrderedDict[Tuple[Any, ...], MatmulResult]" = OrderedDict()
 _MM_CACHE_MAX = 1 << 17
 
 _DISK: Optional[DiskCache] = None
@@ -475,7 +480,7 @@ def reset_matmul_cache_stats() -> None:
     _STATS = MapperCacheStats()
 
 
-def _mm_cache_put(key: tuple, r: MatmulResult) -> None:
+def _mm_cache_put(key: Tuple[Any, ...], r: MatmulResult) -> None:
     if key in _MM_CACHE:
         _MM_CACHE.move_to_end(key)
         _MM_CACHE[key] = r
@@ -504,7 +509,7 @@ def _pair_key(device: Device, shape: MatmulShape) -> str:
                        salt=f"{MODEL_VERSION}/mapper/{_BACKEND}")
 
 
-def _result_to_doc(r: MatmulResult) -> dict:
+def _result_to_doc(r: MatmulResult) -> Dict[str, Any]:
     mp = r.mapping
     return {"latency": r.latency, "flops": r.flops,
             "bytes": r.main_memory_bytes, "cands": r.candidates_searched,
@@ -514,7 +519,7 @@ def _result_to_doc(r: MatmulResult) -> dict:
                         mp.compute_time, mp.memory_time]}
 
 
-def _result_from_doc(doc: dict) -> Optional[MatmulResult]:
+def _result_from_doc(doc: Dict[str, Any]) -> Optional[MatmulResult]:
     try:
         tm, tk, tn, sm, sk, sn, scheme, db2, db1, ct, mt = doc["mapping"]
         return MatmulResult(
@@ -560,13 +565,16 @@ def matmul_perf_batch_multi(
     (previous sessions' searches), then the stacked search; fresh results
     are written through to both layers.
     """
-    results: List[MatmulResult] = [None] * len(pairs)   # type: ignore
+    results: List[Optional[MatmulResult]] = [None] * len(pairs)
     pend_idx: List[int] = []
-    pend_rows, pend_poks, pend_dense, pend_keys = [], [], [], []
+    pend_rows: List[Tuple[Any, ...]] = []
+    pend_poks: List[Any] = []
+    pend_dense: List[int] = []
+    pend_keys: List[Optional[str]] = []
     budget = 0
     disk = _disk_cache()
 
-    def flush():
+    def flush() -> None:
         nonlocal budget
         if not pend_idx:
             return
@@ -596,7 +604,7 @@ def matmul_perf_batch_multi(
             _STATS.memo_hits += 1
             results[i] = hit
             continue
-        key = None
+        key: Optional[str] = None
         if disk.enabled:
             key = _pair_key(device, shape)
             doc = disk.get(key)
@@ -617,7 +625,7 @@ def matmul_perf_batch_multi(
         if budget >= _CHUNK_ROWS:
             flush()
     flush()
-    return results
+    return cast(List[MatmulResult], results)
 
 
 def matmul_perf_batch(device: Device,

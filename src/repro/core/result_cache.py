@@ -41,7 +41,7 @@ from typing import Any, Optional
 #: operator models, interconnect, precision, fusion/scheduling) — it salts
 #: every content key, so old on-disk entries become unreachable instead of
 #: silently stale.
-MODEL_VERSION = "hwe-v6"
+MODEL_VERSION = "hwe-v7"
 
 _ENV_DIR = "REPRO_CACHE_DIR"
 _ENV_ENABLED = "REPRO_DISK_CACHE"

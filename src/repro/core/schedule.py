@@ -38,6 +38,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from .ir import CollectiveSpec, Graph
+from .units import Ratio, Seconds
 
 RESOURCES = ("compute", "vector", "link")
 
@@ -47,9 +48,9 @@ class OpSlot:
     """One scheduled node: where and when it ran."""
     name: str
     resource: str
-    start: float
-    end: float                      # completion seen by consumers
-    duration: float                 # resource occupancy (latency x repeat)
+    start: Seconds
+    end: Seconds                    # completion seen by consumers
+    duration: Seconds               # resource occupancy (latency x repeat)
     critical_pred: int = -1         # node index that set our start (-1: none)
 
     @property
@@ -61,12 +62,12 @@ class OpSlot:
 class Schedule:
     """Per-op timeline + aggregate accounting for one scheduled Graph."""
     slots: List[OpSlot]
-    makespan: float
-    serial: float                   # left-to-right serial sum (seed metric)
-    busy: Dict[str, float]          # per-resource occupied seconds
+    makespan: Seconds
+    serial: Seconds                 # left-to-right serial sum (seed metric)
+    busy: Dict[str, Seconds]        # per-resource occupied time
 
     @property
-    def overlap_speedup(self) -> float:
+    def overlap_speedup(self) -> Ratio:
         """Serial latency / scheduled latency (>= 1)."""
         return self.serial / self.makespan if self.makespan > 0 else 1.0
 
@@ -84,11 +85,11 @@ class Schedule:
         path.reverse()
         return path
 
-    def critical_breakdown(self) -> Dict[str, float]:
+    def critical_breakdown(self) -> Dict[str, Seconds]:
         """Critical-path (not additive) attribution: seconds each named op
         contributes along the critical path, plus any scheduling stall."""
-        out: Dict[str, float] = {}
-        prev_end = 0.0
+        out: Dict[str, Seconds] = {}
+        prev_end: Seconds = 0.0
         for i in self.critical_path():
             s = self.slots[i]
             stall = s.start - prev_end
@@ -128,23 +129,24 @@ def schedule_graph(graph: Graph, latencies: Sequence[float],
         [node.resource for node in graph.nodes]
 
     slots: List[OpSlot] = []
-    ends: List[float] = []
-    starts: List[float] = []
-    free: Dict[str, float] = {}
+    ends: List[Seconds] = []
+    starts: List[Seconds] = []
+    free: Dict[str, Seconds] = {}
     free_by: Dict[str, int] = {}    # node currently holding each resource
-    serial = 0.0
-    makespan = 0.0
-    busy: Dict[str, float] = {}
+    serial: Seconds = 0.0
+    makespan: Seconds = 0.0
+    busy: Dict[str, Seconds] = {}
 
     for i, node in enumerate(graph.nodes):
-        dur = latencies[i]
+        dur: Seconds = latencies[i]
         r = res[i]
         deps = edges[i]
         pipelined = (pipeline_collectives and r == "link"
                      and isinstance(node.spec, CollectiveSpec) and deps)
 
         # -- when can we start? track WHO set the start for attribution ----
-        start, pred = 0.0, -1
+        start: Seconds = 0.0
+        pred = -1
         for d in deps:
             ready = starts[d] if pipelined else ends[d]
             if ready > start:
@@ -152,7 +154,7 @@ def schedule_graph(graph: Graph, latencies: Sequence[float],
         if free.get(r, 0.0) > start:
             start, pred = free[r], free_by.get(r, -1)
 
-        end = start + dur
+        end: Seconds = start + dur
         if pipelined:
             # ring chunks interleave with the producer's tiles, but the last
             # chunk cannot complete before the producer does

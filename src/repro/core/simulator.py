@@ -45,6 +45,7 @@ from .graph import Graph, LayerCost, Plan, build_model
 from .hardware import System
 from .precision import DEFAULT, PrecisionPolicy
 from .scheduler import SlotScheduler
+from .units import Bytes, Flops, PerSecond, Ratio, Seconds
 from . import verify as verify_mod
 from .workload import Trace, TrafficWorkload
 
@@ -59,9 +60,9 @@ __all__ = ["Trace", "TrafficWorkload", "SimResult", "RequestStats",
 @dataclass
 class _RoundCost:
     """Price of one engine round: latency + accounting to aggregate."""
-    latency: float
-    flops: float
-    bytes: float
+    latency: Seconds
+    flops: Flops
+    bytes: Bytes
     bound: Dict[str, float]
 
     @classmethod
@@ -166,16 +167,16 @@ def trace_graphs(cfg: ModelConfig, plan: Plan, traffic: TrafficWorkload,
 class RequestStats:
     """Per-request serving record (all times in seconds)."""
     index: int
-    arrival: float
+    arrival: Seconds
     in_len: int
     out_len: int
-    admitted: float = 0.0       # end of the prefill wave that admitted it
-    ttft: float = 0.0           # arrival -> first output token
-    e2e: float = 0.0            # arrival -> last output token
+    admitted: Seconds = 0.0     # end of the prefill wave that admitted it
+    ttft: Seconds = 0.0         # arrival -> first output token
+    e2e: Seconds = 0.0          # arrival -> last output token
     emitted: int = 0
 
     @property
-    def tpot(self) -> float:
+    def tpot(self) -> Seconds:
         """Mean time per output token after the first."""
         return (self.e2e - self.ttft) / (self.out_len - 1) \
             if self.out_len > 1 else 0.0
@@ -187,53 +188,53 @@ class SimResult:
     requests: List[RequestStats]
     slots: int
     policy: str
-    makespan: float             # clock at last completion (arrivals from t=0)
+    makespan: Seconds           # clock at last completion (arrivals from t=0)
     tokens_out: int
     waves: int                  # admission waves priced
     rounds: int                 # decode rounds priced
-    prefill_busy: float
-    decode_busy: float
-    idle: float                 # engine idle, waiting for arrivals
+    prefill_busy: Seconds
+    decode_busy: Seconds
+    idle: Seconds               # engine idle, waiting for arrivals
     occupancy: List[Tuple[float, int]]   # (time, live slots) after events
-    slot_seconds: float         # integral of live slots over time
-    flops: float
-    bytes: float
+    slot_seconds: Seconds       # integral of live slots over time
+    flops: Flops
+    bytes: Bytes
     bound: Dict[str, float] = field(default_factory=dict)
 
     # -- percentiles -------------------------------------------------------
-    def ttft(self, p: float = 50.0) -> float:
+    def ttft(self, p: float = 50.0) -> Seconds:
         return float(np.percentile([r.ttft for r in self.requests], p))
 
-    def tpot(self, p: float = 50.0) -> float:
+    def tpot(self, p: float = 50.0) -> Seconds:
         vals = [r.tpot for r in self.requests if r.out_len > 1]
         return float(np.percentile(vals, p)) if vals else 0.0
 
-    def e2e(self, p: float = 50.0) -> float:
+    def e2e(self, p: float = 50.0) -> Seconds:
         return float(np.percentile([r.e2e for r in self.requests], p))
 
     # -- aggregates --------------------------------------------------------
     @property
-    def goodput(self) -> float:
+    def goodput(self) -> PerSecond:
         """Output tokens per second over the whole replay."""
         return self.tokens_out / self.makespan if self.makespan > 0 else 0.0
 
     @property
-    def request_rate(self) -> float:
+    def request_rate(self) -> PerSecond:
         return len(self.requests) / self.makespan if self.makespan > 0 \
             else 0.0
 
     @property
-    def mean_occupancy(self) -> float:
+    def mean_occupancy(self) -> Ratio:
         """Time-averaged fraction of slots holding a live request."""
-        busy = self.makespan - self.idle
+        busy: Seconds = self.makespan - self.idle
         return self.slot_seconds / (busy * self.slots) if busy > 0 else 0.0
 
     @property
     def dominant(self) -> str:
         return max(self.bound, key=self.bound.get) if self.bound else "n/a"
 
-    def goodput_slo(self, ttft_slo: Optional[float] = None,
-                    tpot_slo: Optional[float] = None) -> float:
+    def goodput_slo(self, ttft_slo: Optional[Seconds] = None,
+                    tpot_slo: Optional[Seconds] = None) -> PerSecond:
         """Goodput counting only requests meeting the given SLOs."""
         toks = sum(r.out_len for r in self.requests
                    if (ttft_slo is None or r.ttft <= ttft_slo)
@@ -302,7 +303,7 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
     wave_tbl = _Interp(in_pts, costs[:k])            # batch=slots prefill
     one_tbl = _Interp(in_pts, costs[k:2 * k])        # batch=1 refill prefill
     dec_tbl = _Interp(kv_pts, costs[2 * k:])         # batch=slots decode
-    dec_fill = im.pp_fill(system, plan, B, cfg.d_model, policy)
+    dec_fill: Seconds = im.pp_fill(system, plan, B, cfg.d_model, policy)
 
     sched = SlotScheduler(B, policy=traffic.policy)
     recs = [RequestStats(i, r.arrival, r.in_len, r.out_len)
@@ -318,7 +319,7 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
     bound: Dict[str, float] = {}
     occupancy: List[Tuple[float, int]] = []
 
-    def account(c: _RoundCost, fill: float) -> float:
+    def account(c: _RoundCost, fill: Seconds) -> Seconds:
         nonlocal flops, bytes_
         flops += c.flops
         bytes_ += c.bytes

@@ -21,21 +21,22 @@ import functools
 import numpy as np
 
 from .hardware import SystolicArray
+from .units import Cycles, Ratio
 
 
 @functools.lru_cache(maxsize=1 << 20)
-def gemm_cycles(m: int, k: int, n: int, rows: int, cols: int) -> int:
+def gemm_cycles(m: int, k: int, n: int, rows: int, cols: int) -> Cycles:
     """Cycles for one lane's systolic array to compute an (m,k)x(k,n) GEMM."""
     if m <= 0 or k <= 0 or n <= 0:
         return 0
     full_r, rem_r = divmod(m, rows)
     full_c, rem_c = divmod(n, cols)
 
-    def pass_cycles(r_occ: int, c_occ: int) -> int:
+    def pass_cycles(r_occ: int, c_occ: int) -> Cycles:
         # fill (weights/partials skew in over 2*r), stream k, drain c
         return 2 * r_occ + c_occ + k - 2
 
-    total = 0
+    total: Cycles = 0
     total += full_r * full_c * pass_cycles(rows, cols)
     if rem_r:
         total += full_c * pass_cycles(rem_r, cols)
@@ -76,10 +77,10 @@ def gemm_cycles_array(m, k, n, rows, cols, xp=np):
     return total
 
 
-def utilization(m: int, k: int, n: int, sa: SystolicArray) -> float:
+def utilization(m: int, k: int, n: int, sa: SystolicArray) -> Ratio:
     """MAC utilization of the array for this tile (1.0 = every PE busy)."""
-    cyc = gemm_cycles(m, k, n, sa.rows, sa.cols)
+    cyc: Cycles = gemm_cycles(m, k, n, sa.rows, sa.cols)
     if cyc == 0:
         return 0.0
-    ideal = m * k * n / sa.macs
+    ideal: Cycles = m * k * n / sa.macs
     return min(1.0, ideal / cyc)

@@ -1,0 +1,74 @@
+"""CLI for the dimensional-analysis pass: ``python -m repro.unitcheck``.
+
+Lints the pricing core's unit annotations (core/units.py vocabulary,
+core/unitcheck.py engine) and exits nonzero on error-severity diagnostics —
+the CI gate. Mirrors ``python -m repro.verify``.
+
+    PYTHONPATH=src python -m repro.unitcheck src/repro/core
+    PYTHONPATH=src python -m repro.unitcheck --json report.json src/repro/core
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.core.unitcheck import RULES, check_paths, registry_selfcheck
+
+MODES = ("error", "warn", "off")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.unitcheck",
+        description="static unit/dimension checker for the pricing core")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint "
+                         "(default: src/repro/core)")
+    ap.add_argument("--mode", choices=MODES, default="error",
+                    help="error: exit 1 on diagnostics (CI gate); "
+                         "warn: report but exit 0; off: do nothing")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the diagnostic report as JSON")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="also prove every rule fires on its sample mutant")
+    args = ap.parse_args(argv)
+
+    if args.mode == "off":
+        print("unitcheck: mode=off, nothing checked")
+        return 0
+
+    if args.selfcheck:
+        registry_selfcheck()
+
+    paths = args.paths or ["src/repro/core"]
+    diags = check_paths(paths)
+
+    if args.json:
+        report = {
+            "rules": sorted(RULES),
+            "count": len(diags),
+            "diagnostics": [
+                {"rule": d.rule, "severity": d.severity,
+                 "location": d.location, "message": d.message,
+                 "hint": d.hint}
+                for d in diags
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+
+    for d in diags:
+        print(f"{d.severity}[{d.rule}] {d.location}: {d.message}"
+              + (f" (hint: {d.hint})" if d.hint else ""))
+    print(f"unitcheck: {len(diags)} diagnostic(s) across "
+          f"{len(RULES)} rules ({', '.join(paths)})")
+    if args.mode == "error" and any(d.severity == "error" for d in diags):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ canonicalization/keying, and Study's CaseResult keying/serialization.
 """
 import ast
 import inspect
+import pathlib
 import textwrap
 
 import pytest
@@ -49,15 +50,14 @@ _BANNED_CALLS = {"id", "hash", "globals", "locals", "vars", "getenv",
 _DICT_ITERS = {"items", "keys", "values"}
 
 
-def _violations(fn):
-    src = textwrap.dedent(inspect.getsource(fn))
-    tree = ast.parse(src)
+def _lint(tree, label):
+    """Purity violations in an AST (a parsed function or any wrapper)."""
     out = []
 
     class V(ast.NodeVisitor):
         def visit_Name(self, node):
             if node.id in _BANNED_NAMES:
-                out.append(f"{fn.__name__}:{node.lineno}: "
+                out.append(f"{label}:{node.lineno}: "
                            f"references {node.id!r}")
             self.generic_visit(node)
 
@@ -67,14 +67,14 @@ def _violations(fn):
             if (base, node.attr) in {("os", "environ"), ("os", "getenv"),
                                      ("os", "urandom"), ("np", "random"),
                                      ("numpy", "random")}:
-                out.append(f"{fn.__name__}:{node.lineno}: "
+                out.append(f"{label}:{node.lineno}: "
                            f"reads {base}.{node.attr}")
             self.generic_visit(node)
 
         def visit_Call(self, node):
             f = node.func
             if isinstance(f, ast.Name) and f.id in _BANNED_CALLS:
-                out.append(f"{fn.__name__}:{node.lineno}: calls {f.id}()")
+                out.append(f"{label}:{node.lineno}: calls {f.id}()")
             self.generic_visit(node)
 
         # ---- dict-order-dependent iteration ------------------------------
@@ -86,7 +86,7 @@ def _violations(fn):
 
         def _check_iter(self, it, what):
             if self._iter_is_impure(it):
-                out.append(f"{fn.__name__}:{it.lineno}: {what} over bare "
+                out.append(f"{label}:{it.lineno}: {what} over bare "
                            f".{it.func.attr}() — wrap in sorted()")
 
         def visit_For(self, node):
@@ -100,6 +100,11 @@ def _violations(fn):
 
     V().visit(tree)
     return out
+
+
+def _violations(fn):
+    src = textwrap.dedent(inspect.getsource(fn))
+    return _lint(ast.parse(src), fn.__name__)
 
 
 @pytest.mark.parametrize("fn", LINTED, ids=lambda f: f.__qualname__)
@@ -140,6 +145,59 @@ def test_lint_self_check():
     assert _violations(_planted_hash)
     assert _violations(_planted_dict_iter)
     assert _violations(_planted_sorted_ok) == []
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/ and examples/ case builders (unitcheck PR satellite): whatever
+# builds a Study case grid feeds the content-hashed cache keys, so the same
+# purity rules apply. Discovered from source paths — entry scripts are
+# linted without being imported (so examples never execute under pytest).
+# ---------------------------------------------------------------------------
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _source_case_builders():
+    found = []
+    for sub in ("benchmarks", "examples"):
+        for path in sorted((_ROOT / sub).glob("*.py")):
+            tree = ast.parse(path.read_text())
+            for node in tree.body:
+                if isinstance(node, ast.FunctionDef) and (
+                        node.name in ("cases", "build_cases")
+                        or node.name.endswith("_cases")):
+                    found.append((f"{sub}/{path.name}:{node.name}", node))
+    return found
+
+
+_BUILDERS = _source_case_builders()
+
+
+def test_case_builder_discovery():
+    names = [label for label, _ in _BUILDERS]
+    assert any(n.endswith("study_speed.py:_cases") for n in names)
+    assert any(n.endswith("mega_sweep.py:build_cases") for n in names)
+
+
+@pytest.mark.parametrize("item", _BUILDERS, ids=lambda it: it[0])
+def test_benchmark_case_builders_are_pure(item):
+    label, node = item
+    assert _lint(ast.Module(body=[node], type_ignores=[]), label) == []
+
+
+def test_source_lint_catches_planted_violation(tmp_path):
+    bad = tmp_path / "bad_bench.py"
+    bad.write_text(textwrap.dedent("""
+        def build_cases():
+            import time
+            seed = time.time()
+            return [k for k, v in {"a": 1}.items()]
+    """))
+    tree = ast.parse(bad.read_text())
+    node = next(n for n in tree.body if isinstance(n, ast.FunctionDef))
+    v = _lint(ast.Module(body=[node], type_ignores=[]), "bad_bench")
+    assert any("time" in x for x in v)
+    assert any(".items()" in x for x in v)
 
 
 def test_canonical_sorts_dicts():

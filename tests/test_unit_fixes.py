@@ -1,0 +1,162 @@
+"""Behavioral regression tests for the real unit bugs the dimensional-
+analysis pass surfaced (tentpole satellite). One test class per fix:
+
+  a) interconnect: ring-reduce "flops" were computed as bytes/width —
+     dimensionally Elements. The fix routes them through
+     REDUCE_FLOPS_PER_ELEMENT (x1.0, value-preserving); these tests pin the
+     reduction accounting to the LogGP hand-formula so the conversion can
+     never silently pick up a non-unity factor.
+  b) operators: chunked-norm fp32 partials were charged 8 bytes per value
+     (a bytes-vs-elements slip); fp32 is 4 bytes. This changes numbers in
+     the chunked regime only — MODEL_VERSION was bumped for it.
+  c) operators.recurrent_scan: the sequential-chain floor is a cycle count
+     and must cross to seconds through the device frequency (value-
+     preserving rewrite; pinned here against the hand formula).
+"""
+import math
+
+import pytest
+
+from repro.core import hardware as hw
+from repro.core import interconnect as net
+from repro.core import operators, result_cache
+
+
+# ---------------------------------------------------------------------------
+# (a) collective reduction accounting
+# ---------------------------------------------------------------------------
+
+class TestReduceFlops:
+    def test_conversion_factor_is_unity(self):
+        # the fix is value-preserving by construction: one add per element
+        assert net.REDUCE_FLOPS_PER_ELEMENT == 1.0
+
+    def test_all_reduce_matches_hand_formula(self):
+        system = hw.dgx_a100(4)
+        n_bytes = 1 << 22
+        r = net.all_reduce(system, n_bytes)
+        n = system.device_count
+        chunk = n_bytes / n
+        red_flops = (n - 1) * chunk / 2.0       # fp16 payload: 2 B/element
+        assert r.flops == red_flops
+        expected = (2 * (n - 1) * net.link_time(system.link, chunk)
+                    + red_flops / system.device.peak_vector_flops)
+        assert r.latency == pytest.approx(expected, rel=1e-15)
+        assert r.main_memory_bytes == 2 * (n - 1) * chunk
+
+    def test_reduce_scatter_matches_hand_formula(self):
+        system = hw.dgx_a100(8)
+        n_bytes = 3 << 20
+        r = net.reduce_scatter(system, n_bytes)
+        n = system.device_count
+        chunk = n_bytes / n
+        red_flops = (n - 1) * chunk / 2.0
+        assert r.flops == red_flops
+        expected = ((n - 1) * net.link_time(system.link, chunk)
+                    + red_flops / system.device.peak_vector_flops)
+        assert r.latency == pytest.approx(expected, rel=1e-15)
+
+    def test_narrow_payload_doubles_adds_per_byte(self):
+        system = hw.dgx_a100(4)
+        fp16 = net.all_reduce(system, 1 << 20, bytes_elt=2.0)
+        fp8 = net.all_reduce(system, 1 << 20, bytes_elt=1.0)
+        assert fp8.flops == 2 * fp16.flops
+
+
+# ---------------------------------------------------------------------------
+# (b) chunked-norm partials are fp32 = 4 bytes
+# ---------------------------------------------------------------------------
+
+def _chunked_shape(dev, bytes_in=2):
+    """(rows, cols) that force a multi-chunk row reduction on `dev`."""
+    chunk = max(1, dev.core.local_buffer_bytes // (2 * bytes_in))
+    cols = 4 * chunk
+    return 64, cols, 4    # rows, cols, n_chunks == ceil(cols/chunk)
+
+
+class TestNormPartialWidth:
+    def test_fp32_is_four_bytes(self):
+        assert operators.FP32_BYTES == 4.0
+
+    def test_layernorm_penalty_scales_with_partial_width(self, monkeypatch):
+        """Doubling FP32_BYTES back to the buggy 8 must raise latency by
+        exactly the extra partial traffic through the global buffer —
+        proving the penalty term is wired through the constant."""
+        dev = hw.nvidia_a100()
+        rows, cols, n_chunks = _chunked_shape(dev)
+        r4 = operators.layernorm(dev, rows, cols)
+        monkeypatch.setattr(operators, "FP32_BYTES", 8.0)
+        r8 = operators.layernorm(dev, rows, cols)
+        extra = 2 * (rows * n_chunks * 2) * 4.0 / dev.global_buffer_bandwidth
+        assert r8.latency - r4.latency == pytest.approx(extra, rel=1e-9)
+        # streamed bytes are unaffected: partials move GB<->cores, not HBM
+        assert r8.main_memory_bytes == r4.main_memory_bytes
+
+    def test_rmsnorm_penalty_scales_with_partial_width(self, monkeypatch):
+        dev = hw.nvidia_a100()
+        rows, cols, n_chunks = _chunked_shape(dev)
+        r4 = operators.rmsnorm(dev, rows, cols)
+        monkeypatch.setattr(operators, "FP32_BYTES", 8.0)
+        r8 = operators.rmsnorm(dev, rows, cols)
+        extra = 2 * (rows * n_chunks) * 4.0 / dev.global_buffer_bandwidth
+        assert r8.latency - r4.latency == pytest.approx(extra, rel=1e-9)
+
+    def test_layernorm_chunked_matches_hand_formula(self):
+        dev = hw.nvidia_a100()
+        rows, cols, n_chunks = _chunked_shape(dev)
+        r = operators.layernorm(dev, rows, cols)
+        n = rows * cols
+        mem_t = (n * 4 / dev.memory_bandwidth
+                 + 2 * (rows * n_chunks * 2 * 4.0)
+                 / dev.global_buffer_bandwidth)
+        assert r.bound == "memory"          # this regime is memory-bound
+        assert r.latency == pytest.approx(
+            mem_t + dev.kernel_launch_overhead_s, rel=1e-12)
+
+    def test_unchunked_norms_unchanged_by_the_constant(self, monkeypatch):
+        """d_model-sized rows (the frozen seed path) never chunk on A100, so
+        the fix provably cannot move the fp16 reference numbers."""
+        dev = hw.nvidia_a100()
+        chunk = max(1, dev.core.local_buffer_bytes // 4)
+        cols = 12288                        # GPT-3 d_model
+        assert cols <= chunk
+        before = operators.layernorm(dev, 2048, cols)
+        monkeypatch.setattr(operators, "FP32_BYTES", 8.0)
+        after = operators.layernorm(dev, 2048, cols)
+        assert before == after
+
+    def test_model_version_bumped_for_the_numeric_change(self):
+        # the fp32 fix moves chunked-regime numbers -> cache salt must move
+        assert result_cache.MODEL_VERSION == "hwe-v7"
+
+
+# ---------------------------------------------------------------------------
+# (c) scan chain floor crosses cycles -> seconds through the frequency
+# ---------------------------------------------------------------------------
+
+class TestScanChainFloor:
+    def test_chain_floor_matches_hand_formula(self):
+        dev = hw.nvidia_a100()
+        seq, batch, d_state, chunk = 8192, 1, 65536, 128
+        # negligible flops/io so the sequential chain dominates
+        r = operators.recurrent_scan(dev, seq, batch, d_state,
+                                     flops_per_step=1.0, bytes_io=1.0,
+                                     chunk=chunk)
+        width = max(dev.core.lane.vector_unit.width, 1)
+        chain_cycles = (seq / chunk) * (d_state / width)
+        expected = chain_cycles / dev.frequency_hz \
+            + dev.kernel_launch_overhead_s
+        assert r.latency == pytest.approx(expected, rel=1e-12)
+
+    def test_chain_floor_scales_inverse_with_frequency(self):
+        import dataclasses
+        dev = hw.nvidia_a100()
+        slow = dataclasses.replace(dev, frequency_hz=dev.frequency_hz / 2)
+        seq, batch, d_state = 8192, 1, 65536
+        fast_r = operators.recurrent_scan(dev, seq, batch, d_state,
+                                          flops_per_step=1.0, bytes_io=1.0)
+        slow_r = operators.recurrent_scan(slow, seq, batch, d_state,
+                                          flops_per_step=1.0, bytes_io=1.0)
+        fast_chain = fast_r.latency - dev.kernel_launch_overhead_s
+        slow_chain = slow_r.latency - slow.kernel_launch_overhead_s
+        assert slow_chain == pytest.approx(2 * fast_chain, rel=1e-9)

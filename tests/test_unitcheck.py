@@ -1,0 +1,268 @@
+"""Planted-mutant suite for the static unit checker (the tentpole's proof
+of work): every rule must catch a representative unit bug — including the
+four acceptance mutants (bytes+seconds add, cycles returned as seconds,
+elements stored into a bytes field, a forgotten bandwidth divide) — at the
+right rule id AND source line, and the corrected twin of each mutant must
+come back clean. Mirrors tests/test_verify.py's registry-coverage pattern.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import unitcheck
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _diags(src):
+    return unitcheck.check_source(textwrap.dedent(src), filename="<m>")
+
+
+def _assert_caught(src, rule, line):
+    hits = [d for d in _diags(src) if d.rule == rule]
+    assert hits, f"{rule} missed its mutant entirely"
+    locs = [d.location for d in hits]
+    assert f"<m>:{line}" in locs, \
+        f"{rule} fired at {locs}, expected <m>:{line}"
+    assert all(d.severity == "error" for d in hits)
+
+
+def _assert_clean(src):
+    assert _diags(src) == []
+
+
+# ---------------------------------------------------------------------------
+# the four acceptance mutants
+# ---------------------------------------------------------------------------
+
+def test_mutant_bytes_plus_seconds():
+    _assert_caught("""\
+        from repro.core.units import Bytes, Seconds
+        def f(n: Bytes, t: Seconds) -> float:
+            return n + t
+        """, "unit.add-mismatch", 3)
+    _assert_clean("""\
+        from repro.core.units import Bytes, BytesPerSecond, Seconds
+        def f(n: Bytes, bw: BytesPerSecond, t: Seconds) -> Seconds:
+            return n / bw + t
+        """)
+
+
+def test_mutant_cycles_returned_as_seconds():
+    _assert_caught("""\
+        from repro.core.units import Cycles, Seconds
+        def f(c: Cycles) -> Seconds:
+            return c
+        """, "unit.return-mismatch", 3)
+    _assert_clean("""\
+        from repro.core.units import Cycles, Hertz, Seconds
+        def f(c: Cycles, freq: Hertz) -> Seconds:
+            return c / freq
+        """)
+
+
+def test_mutant_elements_stored_into_bytes_field():
+    _assert_caught("""\
+        from dataclasses import dataclass
+        from repro.core.units import Bytes, Elements
+
+        @dataclass
+        class Spec:
+            n_bytes: Bytes = 0.0
+
+        def f(n: Elements) -> Spec:
+            s = Spec()
+            s.n_bytes = n
+            return s
+        """, "unit.field-mismatch", 10)
+    _assert_clean("""\
+        from dataclasses import dataclass
+        from repro.core.units import Bytes, BytesPerElement, Elements
+
+        @dataclass
+        class Spec:
+            n_bytes: Bytes = 0.0
+
+        def f(n: Elements, width: BytesPerElement) -> Spec:
+            s = Spec()
+            s.n_bytes = n * width
+            return s
+        """)
+
+
+def test_mutant_missing_bandwidth_divide():
+    _assert_caught("""\
+        from repro.core.units import Bytes, BytesPerSecond, Seconds
+        def f(n: Bytes, bw: BytesPerSecond) -> Seconds:
+            t: Seconds = n
+            return t
+        """, "unit.assign-mismatch", 3)
+    _assert_clean("""\
+        from repro.core.units import Bytes, BytesPerSecond, Seconds
+        def f(n: Bytes, bw: BytesPerSecond) -> Seconds:
+            t: Seconds = n / bw
+            return t
+        """)
+
+
+# ---------------------------------------------------------------------------
+# the remaining rules
+# ---------------------------------------------------------------------------
+
+def test_mutant_compare_mismatch():
+    _assert_caught("""\
+        from repro.core.units import Flops, Seconds
+        def f(x: Flops, t: Seconds) -> bool:
+            return x > t
+        """, "unit.compare-mismatch", 3)
+    _assert_clean("""\
+        from repro.core.units import Seconds
+        def f(a: Seconds, b: Seconds) -> bool:
+            return a > b
+        """)
+
+
+def test_mutant_call_mismatch():
+    _assert_caught("""\
+        from repro.core.units import Bytes, Seconds
+        def launch(t: Seconds) -> Seconds:
+            return t
+        def f(n: Bytes) -> Seconds:
+            return launch(n)
+        """, "unit.call-mismatch", 5)
+    _assert_clean("""\
+        from repro.core.units import Seconds
+        def launch(t: Seconds) -> Seconds:
+            return t
+        def f(t: Seconds) -> Seconds:
+            return launch(t)
+        """)
+
+
+def test_mutant_constructor_field_mismatch():
+    """Dataclass constructors check keyword args against field units (a
+    constructor argument is a field store, so it carries the field rule)."""
+    _assert_caught("""\
+        from dataclasses import dataclass
+        from repro.core.units import Cycles, Seconds
+
+        @dataclass
+        class Slot:
+            start: Seconds = 0.0
+
+        def f(c: Cycles) -> Slot:
+            return Slot(start=c)
+        """, "unit.field-mismatch", 9)
+
+
+def test_mutant_augassign_keeps_declared_unit():
+    _assert_caught("""\
+        from repro.core.units import Bytes, Seconds
+        def f(n: Bytes) -> Seconds:
+            t: Seconds = 0.0
+            t += n
+            return t
+        """, "unit.add-mismatch", 4)
+
+
+def test_dimensionless_and_any_do_not_fire():
+    """Gradual typing: literals, unannotated values and Ratio scaling are
+    never diagnosed — only contradictions between known units are."""
+    _assert_clean("""\
+        from repro.core.units import Ratio, Seconds
+        def f(t: Seconds, util: Ratio, k: int) -> Seconds:
+            body = t * util * 2.0 + t
+            mystery = helper(k)
+            return body + mystery * 1.0
+        def helper(k):
+            return k
+        """)
+
+
+# ---------------------------------------------------------------------------
+# registry coverage (every rule has a caught sample; no orphans either way)
+# ---------------------------------------------------------------------------
+
+def test_every_rule_has_a_sample_mutant():
+    assert set(unitcheck.RULES) == set(unitcheck._SAMPLE_MUTANTS)
+
+
+@pytest.mark.parametrize("rule_id", sorted(unitcheck.RULES))
+def test_registry_sample_fires(rule_id):
+    diags = unitcheck.registry_diagnostics()[rule_id]
+    assert diags, f"{rule_id}'s sample mutant produced no diagnostic"
+    assert all(d.rule == rule_id for d in diags)
+
+
+def test_registry_selfcheck_passes():
+    unitcheck.registry_selfcheck()      # raises on any uncaught sample
+
+
+def test_parse_error_is_reported_not_raised():
+    diags = unitcheck.check_source("def broken(:\n", filename="<bad>")
+    assert any(d.rule == "unit.parse-error" for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# CLI gate: python -m repro.unitcheck
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args, cwd=_ROOT):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "repro.unitcheck", *args],
+                          capture_output=True, text=True, cwd=cwd, env=env)
+
+
+def test_cli_clean_tree_exits_zero():
+    p = _run_cli(str(_ROOT / "src" / "repro" / "core"))
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "0 diagnostic(s)" in p.stdout
+
+
+def test_cli_error_mode_gates(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""\
+        from repro.core.units import Bytes, Seconds
+        def f(n: Bytes, t: Seconds) -> float:
+            return n + t
+        """))
+    p = _run_cli(str(bad))
+    assert p.returncode == 1
+    assert "unit.add-mismatch" in p.stdout
+    assert f"{bad}:3" in p.stdout
+
+    p = _run_cli("--mode", "warn", str(bad))
+    assert p.returncode == 0
+    assert "unit.add-mismatch" in p.stdout
+
+    p = _run_cli("--mode", "off", str(bad))
+    assert p.returncode == 0
+    assert "nothing checked" in p.stdout
+
+
+def test_cli_json_report(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""\
+        from repro.core.units import Cycles, Seconds
+        def f(c: Cycles) -> Seconds:
+            return c
+        """))
+    out = tmp_path / "report.json"
+    p = _run_cli("--json", str(out), str(bad))
+    assert p.returncode == 1
+    doc = json.loads(out.read_text())
+    assert doc["count"] == len(doc["diagnostics"]) >= 1
+    assert doc["diagnostics"][0]["rule"] == "unit.return-mismatch"
+    assert sorted(doc["rules"]) == sorted(unitcheck.RULES)
+
+
+def test_cli_selfcheck_flag():
+    p = _run_cli("--selfcheck", str(_ROOT / "src" / "repro" / "core"))
+    assert p.returncode == 0, p.stdout + p.stderr

@@ -1,0 +1,141 @@
+"""Unit-algebra property tests (tentpole satellite): the dimension vectors
+behind core/units.py form an abelian group under * and /, and the alias
+vocabulary encodes the pricing identities the checker relies on
+(Bytes / BytesPerSecond = Seconds, Cycles / Hertz = Seconds, ...).
+
+Property tests draw random exponent vectors when hypothesis is installed
+and skip cleanly otherwise (tests/_hypothesis_compat.py); the algebraic
+identity tests and the shipped-tree gate below always run.
+"""
+import pathlib
+
+import pytest
+
+from repro.core import unitcheck
+from repro.core import units
+from repro.core.units import ALIASES, DIMENSIONLESS, DIMENSIONS, Unit, unit_of
+
+from _hypothesis_compat import given, settings, st
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+units_st = st.builds(
+    lambda d: Unit(**d),
+    st.dictionaries(st.sampled_from(DIMENSIONS), st.integers(-4, 4),
+                    max_size=len(DIMENSIONS)))
+
+
+# ---------------------------------------------------------------------------
+# group laws
+# ---------------------------------------------------------------------------
+
+@given(units_st, units_st, units_st)
+@settings(max_examples=200, deadline=None)
+def test_mul_associative(a, b, c):
+    assert (a * b) * c == a * (b * c)
+
+
+@given(units_st, units_st)
+@settings(max_examples=200, deadline=None)
+def test_mul_commutative(a, b):
+    assert a * b == b * a
+
+
+@given(units_st)
+@settings(max_examples=100, deadline=None)
+def test_identity_and_inverse(a):
+    assert a * DIMENSIONLESS == a
+    assert a / DIMENSIONLESS == a
+    assert (a / a).dimensionless
+    assert (DIMENSIONLESS / a) * a == DIMENSIONLESS
+
+
+@given(units_st, units_st)
+@settings(max_examples=200, deadline=None)
+def test_cancellation(a, b):
+    assert (a * b) / b == a
+    assert (a / b) * b == a
+
+
+@given(units_st)
+@settings(max_examples=100, deadline=None)
+def test_integer_powers(a):
+    assert a ** 0 == DIMENSIONLESS
+    assert a ** 1 == a
+    assert a ** 2 == a * a
+    assert a ** -1 == DIMENSIONLESS / a
+
+
+@given(units_st, units_st)
+@settings(max_examples=200, deadline=None)
+def test_eq_hash_consistent(a, b):
+    if a == b:
+        assert hash(a) == hash(b)
+
+
+# ---------------------------------------------------------------------------
+# the pricing identities (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num, den, out", [
+    ("Bytes", "BytesPerSecond", "Seconds"),
+    ("Flops", "FlopsPerSecond", "Seconds"),
+    ("Cycles", "Hertz", "Seconds"),
+    ("Bytes", "BytesPerElement", "Elements"),
+    ("Flops", "FlopsPerElement", "Elements"),
+    ("Bytes", "BytesPerCycle", "Cycles"),
+    ("Bytes", "Seconds", "BytesPerSecond"),
+    ("Flops", "Seconds", "FlopsPerSecond"),
+])
+def test_division_identities(num, den, out):
+    assert ALIASES[num] / ALIASES[den] == ALIASES[out]
+
+
+def test_multiplication_identities():
+    assert ALIASES["Elements"] * ALIASES["BytesPerElement"] == ALIASES["Bytes"]
+    assert ALIASES["Elements"] * ALIASES["FlopsPerElement"] == ALIASES["Flops"]
+    assert ALIASES["Hertz"] * ALIASES["Seconds"] == ALIASES["Cycles"]
+    assert ALIASES["Ratio"] == DIMENSIONLESS
+
+
+def test_unit_of_agrees_with_registry():
+    """The Annotated metadata on each alias IS its registry entry."""
+    for name, u in ALIASES.items():
+        assert unit_of(getattr(units, name)) == u
+    with pytest.raises(TypeError):
+        unit_of(float)
+
+
+def test_distinct_dimensions_differ():
+    base = [ALIASES[a] for a in ("Seconds", "Cycles", "Bytes", "Elements",
+                                 "Flops", "Mm2", "Dollars", "Watts")]
+    assert len(set(base)) == len(base)
+    for u in base:
+        assert not u.dimensionless
+
+
+def test_non_unit_operands_raise():
+    with pytest.raises(TypeError):
+        ALIASES["Seconds"] * 3          # type: ignore[operator]
+    with pytest.raises(TypeError):
+        ALIASES["Seconds"] / "x"        # type: ignore[operator]
+    with pytest.raises(TypeError):
+        ALIASES["Seconds"] ** 1.5       # type: ignore[operator]
+
+
+def test_aliases_cover_every_dimension():
+    dims_named = set()
+    for u in ALIASES.values():
+        dims_named |= {d for d, _ in u.dims}
+    assert dims_named == set(DIMENSIONS)
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree is clean (the CI gate, run in-process)
+# ---------------------------------------------------------------------------
+
+def test_shipped_core_has_zero_unit_errors():
+    diags = unitcheck.check_paths([str(_ROOT / "src" / "repro" / "core")])
+    errors = [d for d in diags if d.severity == "error"]
+    assert errors == [], "\n".join(
+        f"{d.rule} {d.location}: {d.message}" for d in errors)

@@ -436,7 +436,9 @@ def test_cli_module_invocation():
 # at least resolve at runtime — mypy itself runs in CI
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("modname", ["ir", "schedule", "precision", "verify"])
+@pytest.mark.parametrize("modname", ["ir", "schedule", "precision", "verify",
+                                     "units", "mapper", "interconnect",
+                                     "operators", "roofline"])
 def test_core_annotations_resolve(modname):
     import importlib
     import typing
@@ -444,4 +446,4 @@ def test_core_annotations_resolve(modname):
     for name in getattr(mod, "__all__", None) or dir(mod):
         obj = getattr(mod, name)
         if isinstance(obj, type) and dataclasses.is_dataclass(obj):
-            typing.get_type_hints(obj)      # raises on broken annotations
+            typing.get_type_hints(obj, include_extras=True)  # raises if broken
