@@ -10,15 +10,32 @@ paper reproductions.
 
 ``--json out.json`` additionally writes a machine-readable report (per-bench
 wall-clock seconds + every CHECKS key/ratio) so the perf trajectory is
-tracked across PRs — CI emits BENCH_quick.json from the smoke run.
+tracked across PRs — CI emits BENCH_quick.json from the smoke run. Every
+report is stamped with the git SHA and the analytical MODEL_VERSION, and
+each entry carries the framework's own wall-clock phase spans
+(presolve/search/schedule/verify/evaluate, core/obs.py) so self-time is
+tracked next to the modeled numbers.
+
+``--trace-dir DIR`` drops the smoke Perfetto traces (trace_smoke) into
+DIR — CI uploads them as artifacts.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import platform
+import subprocess
 import sys
 import time
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
 
 
 def main(argv=None) -> None:
@@ -28,13 +45,19 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write a machine-readable BENCH_*.json report "
                          "(per-bench seconds + checks) to PATH")
+    ap.add_argument("--trace-dir", metavar="DIR", default=None,
+                    help="write the smoke Perfetto traces to DIR "
+                         "(uploaded as CI artifacts)")
     args = ap.parse_args(argv)
+
+    from repro.core import obs
+    from repro.core.result_cache import MODEL_VERSION
 
     from . import (fig5_operators, fig6_area, table3_compute_designs,
                    fig8_bandwidth, fig9_buffers, table4_designs,
                    mapper_speed, planner_archs, precision_sweep,
                    schedule_overlap, serving_sim, study_speed,
-                   unitcheck_speed, verify_lint)
+                   trace_smoke, unitcheck_speed, verify_lint)
 
     if args.quick:
         modules = [
@@ -48,6 +71,8 @@ def main(argv=None) -> None:
             ("schedule_overlap", schedule_overlap, {"quick": True}),
             ("verify_lint", verify_lint, {"quick": True}),
             ("unitcheck_speed", unitcheck_speed, {"quick": True}),
+            ("trace_smoke", trace_smoke,
+             {"quick": True, "trace_dir": args.trace_dir}),
         ]
     else:
         modules = [
@@ -65,16 +90,28 @@ def main(argv=None) -> None:
             ("schedule_overlap", schedule_overlap, {}),
             ("verify_lint", verify_lint, {}),
             ("unitcheck_speed", unitcheck_speed, {}),
+            ("trace_smoke", trace_smoke, {"trace_dir": args.trace_dir}),
         ]
 
     print("name,us_per_call,derived")
+    reg = obs.metrics()
+    reg.set_enabled(True)       # framework self-profiling (phase spans)
     failed = []
     all_checks = {}
     timings = {}
+    phases = {}
     for name, mod, kw in modules:
+        snap0 = reg.snapshot()
         t0 = time.perf_counter()
         checks = mod.run(**kw)
         dt = time.perf_counter() - t0
+        snap1 = reg.snapshot()
+        phases[name] = {
+            k[len("phase."):-len(".seconds")]:
+                round(v - snap0.get(k, 0.0), 4)
+            for k, v in sorted(snap1.items())
+            if k.startswith("phase.") and k.endswith(".seconds")
+            and v - snap0.get(k, 0.0) > 0.0}
         all_checks[name] = checks
         timings[name] = dt
         bad = [k for k, v in checks.items()
@@ -89,14 +126,20 @@ def main(argv=None) -> None:
         for k, v in checks.items():
             print(f"# {name}.{k} = {v}")
     if args.json:
+        sha = _git_sha()
         report = {
             "suite": "quick" if args.quick else "full",
             "python": platform.python_version(),
             "platform": platform.platform(),
+            "git_sha": sha,
+            "model_version": MODEL_VERSION,
             "passed": not failed,
             "benchmarks": {
                 name: {"seconds": round(timings[name], 4),
-                       "checks": all_checks[name]}
+                       "checks": all_checks[name],
+                       "git_sha": sha,
+                       "model_version": MODEL_VERSION,
+                       "phases": phases[name]}
                 for name in timings
             },
         }

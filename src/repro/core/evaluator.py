@@ -30,6 +30,7 @@ from .ir import (CollectiveSpec, ElementwiseSpec, FusedMatmulSpec, Graph,
                  MatmulSpec, NormSpec, OpSpec, ScanSpec, SoftmaxSpec,
                  TrafficSpec, resource_of)
 from .mapper import matmul_cache_stats, matmul_perf_batch
+from .obs import metrics
 from .schedule import schedule_graph
 from . import verify as verify_mod
 
@@ -52,6 +53,11 @@ class EvalStats:
     mapper_memo_hits: int = 0
     mapper_disk_hits: int = 0
     mapper_evictions: int = 0
+    # Study result-cache outcomes attributed to this evaluator: cases whose
+    # CaseResult was served from the persistent case cache vs re-evaluated
+    # (study.Study.run fills these in)
+    case_hits: int = 0
+    case_misses: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -76,6 +82,8 @@ class EvalStats:
                 f"mapper_memo_hits={self.mapper_memo_hits} "
                 f"mapper_disk_hits={self.mapper_disk_hits} "
                 f"mapper_evictions={self.mapper_evictions} "
+                f"case_hits={self.case_hits} "
+                f"case_misses={self.case_misses} "
                 f"sched_vs_serial={self.schedule_ratio:.3f}")
 
 
@@ -251,14 +259,17 @@ class Evaluator:
         producers) instead of the serial sum, and carries the per-op
         start/end schedule."""
         from .graph import LayerCost      # late import: graph builds on ir
+        reg = metrics()
         if self.verify_mode != "off":
-            for g in graphs:
-                if g not in self._verified:
-                    verify_mod.verify_graph(g, self.device,
-                                            mode=self.verify_mode)
-                    self._verified.add(g)
-        prefetched = self._prefetch_matmuls(graphs) if self.batch_matmuls \
-            else set()
+            with reg.phase("verify"):
+                for g in graphs:
+                    if g not in self._verified:
+                        verify_mod.verify_graph(g, self.device,
+                                                mode=self.verify_mode)
+                        self._verified.add(g)
+        with reg.phase("search"):
+            prefetched = self._prefetch_matmuls(graphs) \
+                if self.batch_matmuls else set()
         out = []
         for g in graphs:
             self.stats.graphs += 1
@@ -277,14 +288,17 @@ class Evaluator:
             cost._resources = tuple(resource_of(n.spec) for n in g)
             if overlap:
                 lats = [o.latency for o in cost.ops]
-                sch = schedule_graph(g, lats)
+                with reg.phase("schedule"):
+                    sch = schedule_graph(g, lats)
                 if self.verify_mode != "off":
                     # certificate check: the schedule really is a feasible
                     # witness of its claimed makespan (ISSUE 7)
-                    verify_mod.verify_schedule(g, lats, sch,
-                                               mode=self.verify_mode)
+                    with reg.phase("verify"):
+                        verify_mod.verify_schedule(g, lats, sch,
+                                                   mode=self.verify_mode)
                 cost.schedule = sch
                 self.stats.serial_seconds += sch.serial
                 self.stats.scheduled_seconds += sch.makespan
             out.append(cost)
+        reg.inc("evaluator.graphs", len(graphs))
         return out

@@ -172,8 +172,18 @@ def _fuse_once(nodes: List[Node], edges: List[Tuple[int, ...]],
                         else spec
                     epi = (spec.epilogue if isinstance(spec, FusedMatmulSpec)
                            else ()) + (nj.spec,)
+                    # HBM bytes this absorption removes, per instance: the
+                    # producer's current effective output write plus the
+                    # epilogue's serial input read (its own output write
+                    # becomes the fused kernel's write, so it cancels)
+                    prev: Bytes = spec.elided \
+                        if isinstance(spec, FusedMatmulSpec) else 0.0
+                    saved: Bytes = (gemm.batch * gemm.m * gemm.n
+                                    * gemm.bytes_out
+                                    + _in_read_bytes(nj.spec))
                     fused = FusedMatmulSpec(
-                        _rescaled(gemm, _out_write_bytes(nj.spec)), epi)
+                        _rescaled(gemm, _out_write_bytes(nj.spec)), epi,
+                        elided=prev + saved)
                     nodes[i] = Node(fused, f"{node.name}+{nj.name}",
                                     node.repeat, node.deps)
                     # rewire: j's consumers now read the fused node
@@ -196,9 +206,15 @@ def _fuse_once(nodes: List[Node], edges: List[Tuple[int, ...]],
                 mj = nj.spec
                 if isinstance(mj, MatmulSpec) and nj.repeat == node.repeat \
                         and float(mj.batch * mj.m * mj.k) == _out_elems(spec):
+                    # streaming removes the producer's remaining effective
+                    # write AND the consumer GEMM's activation read
+                    g0 = spec.gemm
+                    streamed: Bytes = (g0.batch * g0.m * g0.n * g0.bytes_out
+                                       + mj.batch * mj.m * mj.k * mj.bytes_a)
                     nodes[i] = Node(
                         FusedMatmulSpec(_rescaled(spec.gemm, 0.0),
-                                        spec.epilogue, stream_out=True),
+                                        spec.epilogue, stream_out=True,
+                                        elided=spec.elided + streamed),
                         node.name, node.repeat, node.deps)
                     nodes[j] = Node(replace(mj, bytes_a=0), nj.name,
                                     nj.repeat, nj.deps)
@@ -241,21 +257,19 @@ def _in_read_bytes(spec: OpSpec) -> Bytes:
 def elided_bytes(graph: Graph, fused: Graph) -> Bytes:
     """Main-memory traffic the fusion rewrite removed, by spec accounting
     (producer output writes + epilogue input reads + streamed outputs).
-    Reported by benchmarks; the evaluator's per-kernel totals are the
-    ground truth (the mapper may also re-tile the cheaper fused shape)."""
-    def graph_io(g: Graph) -> Bytes:
-        total: Bytes = 0.0
-        for node in g:
-            s = node.spec
-            if isinstance(s, FusedMatmulSpec):
-                g0 = s.gemm
-                total += node.repeat * g0.batch * (
-                    g0.m * g0.n * g0.bytes_out + g0.m * g0.k * g0.bytes_a)
-            elif isinstance(s, MatmulSpec):
-                total += node.repeat * s.batch * (
-                    s.m * s.n * s.bytes_out + s.m * s.k * s.bytes_a)
-            elif _epilogue_ok(s):
-                total += node.repeat * (_in_read_bytes(s)
-                                        + _out_write_bytes(s))
-        return total
-    return graph_io(graph) - graph_io(fused)
+
+    Each rewrite in `_fuse_once` now records its per-instance savings in
+    `FusedMatmulSpec.elided`, so this is a straight sum over the fused
+    graph — the identical numbers the attribution reports (core/obs.py)
+    surface per op, with no second derivation that could drift. `graph` is
+    kept in the signature for call-site symmetry (and so a non-fusing
+    policy trivially reports 0). The evaluator's per-kernel totals remain
+    the ground truth (the mapper may also re-tile the cheaper fused
+    shape)."""
+    del graph  # savings live on the fused specs themselves
+    total: Bytes = 0.0
+    for node in fused:
+        s = node.spec
+        if isinstance(s, FusedMatmulSpec):
+            total += node.repeat * s.elided
+    return total

@@ -145,10 +145,19 @@ class FusedMatmulSpec:
     vector-unit compute time: their input reads and intermediate writes are
     elided, exactly what kernels/flash_attention and kernels/matmul's fused
     dequant epilogues do on real hardware.
+
+    `elided` records the HBM bytes this fusion removed relative to the
+    serial graph (intermediate writes + epilogue re-reads, and for
+    stream_out also the consumer GEMM's activation read), accumulated by
+    the fusion rewrites per instance of this node. It is the single source
+    of truth for fusion savings: both `fusion.elided_bytes` and the
+    attribution reports (core/obs.py) sum it rather than re-deriving
+    traffic deltas.
     """
     gemm: MatmulSpec
     epilogue: Tuple["OpSpec", ...]
     stream_out: bool = False
+    elided: Bytes = 0.0
 
 
 OpSpec = Union[MatmulSpec, SoftmaxSpec, NormSpec, ElementwiseSpec, ScanSpec,

@@ -51,11 +51,12 @@ import os
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple, cast
+from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple, cast
 
 import numpy as np
 
 from .hardware import Device
+from .obs import metrics
 from .result_cache import MODEL_VERSION, DiskCache, content_key
 from .systolic import gemm_cycles_array
 from .units import Bytes, Flops, Seconds
@@ -371,6 +372,7 @@ def _solve_chunk(devs: Sequence[Device], shapes: Sequence[MatmulShape],
         tables = _jax_tables(g)
     else:
         tables = _chunk_tables_numpy(g)
+    _REG.inc(f"mapper.chunks_{_BACKEND}")
     return _pick_winners(g, tables, devs, shapes)
 
 
@@ -435,14 +437,45 @@ def set_mapper_backend(backend: str) -> str:
 # result memo: bounded in-memory LRU backed by the persistent disk layer
 # ---------------------------------------------------------------------------
 
-@dataclass
+_REG = metrics()
+
+
 class MapperCacheStats:
     """Accounting for the two memo layers (evaluator snapshots the deltas
-    into EvalStats; benchmarks read it directly)."""
-    memo_hits: int = 0       # served from the in-memory LRU
-    disk_hits: int = 0       # served from the persistent layer
-    misses: int = 0          # actually searched
-    evictions: int = 0       # LRU entries dropped at capacity
+    into EvalStats; benchmarks read it directly).
+
+    Since the observability PR this is a *window* over the process-wide
+    `MetricsRegistry` ``mapper.*`` counters (core/obs.py), which are the
+    single source of truth: each instance reports counts accumulated since
+    its own construction, so `reset_matmul_cache_stats()` (which installs a
+    fresh window) behaves exactly like the old zeroed dataclass while the
+    registry itself stays monotone for whole-process reporting."""
+
+    _KEYS: ClassVar[Tuple[str, ...]] = ("memo_hits", "disk_hits", "misses",
+                                        "evictions")
+
+    def __init__(self) -> None:
+        self._base: Dict[str, float] = {
+            k: _REG.counter(f"mapper.{k}") for k in self._KEYS}
+
+    def _window(self, k: str) -> int:
+        return int(_REG.counter(f"mapper.{k}") - self._base[k])
+
+    @property
+    def memo_hits(self) -> int:     # served from the in-memory LRU
+        return self._window("memo_hits")
+
+    @property
+    def disk_hits(self) -> int:     # served from the persistent layer
+        return self._window("disk_hits")
+
+    @property
+    def misses(self) -> int:        # actually searched
+        return self._window("misses")
+
+    @property
+    def evictions(self) -> int:     # LRU entries dropped at capacity
+        return self._window("evictions")
 
     def summary(self) -> str:
         return (f"memo_hits={self.memo_hits} disk_hits={self.disk_hits} "
@@ -487,7 +520,7 @@ def _mm_cache_put(key: Tuple[Any, ...], r: MatmulResult) -> None:
         return
     while len(_MM_CACHE) >= _MM_CACHE_MAX:
         _MM_CACHE.popitem(last=False)
-        _STATS.evictions += 1
+        _REG.inc("mapper.evictions")
     _MM_CACHE[key] = r
 
 
@@ -601,7 +634,7 @@ def matmul_perf_batch_multi(
         hit = _MM_CACHE.get((device, shape))
         if hit is not None:
             _MM_CACHE.move_to_end((device, shape))
-            _STATS.memo_hits += 1
+            _REG.inc("mapper.memo_hits")
             results[i] = hit
             continue
         key: Optional[str] = None
@@ -610,11 +643,11 @@ def matmul_perf_batch_multi(
             doc = disk.get(key)
             r = _result_from_doc(doc) if doc is not None else None
             if r is not None:
-                _STATS.disk_hits += 1
+                _REG.inc("mapper.disk_hits")
                 _mm_cache_put((device, shape), r)
                 results[i] = r
                 continue
-        _STATS.misses += 1
+        _REG.inc("mapper.misses")
         cols, p_ok, n_dense = _candidate_rows(device, shape)
         pend_idx.append(i)
         pend_rows.append(cols)

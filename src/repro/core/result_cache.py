@@ -37,6 +37,8 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Optional
 
+from .obs import metrics
+
 #: Bump on ANY semantic change to the analytical models (mapper cost model,
 #: operator models, interconnect, precision, fusion/scheduling) — it salts
 #: every content key, so old on-disk entries become unreachable instead of
@@ -197,6 +199,12 @@ class DiskCache:
         self._enabled = enabled
         self.stats = DiskCacheStats()
 
+    def _bump(self, what: str) -> None:
+        # local per-namespace stats stay the API; the process-wide registry
+        # (core/obs.py) gets a mirrored monotone counter for reporting
+        setattr(self.stats, what, getattr(self.stats, what) + 1)
+        metrics().inc(f"cache.{self.namespace}.{what}")
+
     @property
     def enabled(self) -> bool:
         return cache_enabled() if self._enabled is None else self._enabled
@@ -218,27 +226,27 @@ class DiskCache:
             with open(path, "r") as f:
                 doc = json.load(f)
         except FileNotFoundError:
-            self.stats.misses += 1
+            self._bump("misses")
             return None
         except (json.JSONDecodeError, UnicodeDecodeError, ValueError):
             # torn write or bit rot: drop the entry, miss
-            self.stats.corrupt += 1
+            self._bump("corrupt")
             try:
                 os.unlink(path)
             except OSError:
                 pass
             return None
         except OSError:
-            self.stats.errors += 1
+            self._bump("errors")
             return None
         if not isinstance(doc, dict):
-            self.stats.corrupt += 1
+            self._bump("corrupt")
             try:
                 os.unlink(path)
             except OSError:
                 pass
             return None
-        self.stats.hits += 1
+        self._bump("hits")
         return doc
 
     def put(self, key: str, doc: dict) -> None:
@@ -258,9 +266,9 @@ class DiskCache:
                 except OSError:
                     pass
                 raise
-            self.stats.puts += 1
+            self._bump("puts")
         except OSError:
-            self.stats.errors += 1          # read-only / full disk: degrade
+            self._bump("errors")          # read-only / full disk: degrade
 
     def clear(self) -> None:
         """Remove every entry of this namespace from disk."""
@@ -269,7 +277,7 @@ class DiskCache:
         except FileNotFoundError:
             pass
         except OSError:
-            self.stats.errors += 1
+            self._bump("errors")
 
     def __len__(self) -> int:
         try:

@@ -200,6 +200,9 @@ class SimResult:
     flops: Flops
     bytes: Bytes
     bound: Dict[str, float] = field(default_factory=dict)
+    #: engine phase spans for the trace exporter (core/trace_export.py):
+    #: ("wave" | "refill" | "decode" | "idle", start, end) in virtual seconds
+    events: List[Tuple[str, Seconds, Seconds]] = field(default_factory=list)
 
     # -- percentiles -------------------------------------------------------
     def ttft(self, p: float = 50.0) -> Seconds:
@@ -318,6 +321,7 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
     flops = bytes_ = 0.0
     bound: Dict[str, float] = {}
     occupancy: List[Tuple[float, int]] = []
+    events: List[Tuple[str, float, float]] = []
 
     def account(c: _RoundCost, fill: Seconds) -> Seconds:
         nonlocal flops, bytes_
@@ -340,17 +344,20 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
             # ---- admission wave: price the prefill(s), then occupy -------
             wave = [r for _, r in pairs]
             if sched.idle:
+                kind = "wave"
                 S = max(r.in_len for r in wave)
                 dt = account(wave_tbl.at(S),
                              im.pp_fill(system, plan, B * S, cfg.d_model,
                                         policy))
             else:
+                kind = "refill"
                 dt = 0.0
                 for r in wave:
                     dt += account(one_tbl.at(r.in_len),
                                   im.pp_fill(system, plan, r.in_len,
                                              cfg.d_model, policy))
             slot_seconds += len(live) * dt
+            events.append((kind, t, t + dt))
             t += dt
             prefill_busy += dt
             waves += 1
@@ -367,6 +374,7 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
                      for s in live)
             dt = account(dec_tbl.at(kv), dec_fill)
             slot_seconds += len(live) * dt
+            events.append(("decode", t, t + dt))
             t += dt
             decode_busy += dt
             rounds += 1
@@ -387,6 +395,7 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
                     "simulator deadlock: no live slots, no waiting "
                     "requests, no future arrivals")
             idle += trace.requests[i_next].arrival - t
+            events.append(("idle", t, trace.requests[i_next].arrival))
             t = trace.requests[i_next].arrival
 
     return SimResult(requests=recs, slots=B, policy=traffic.policy,
@@ -394,4 +403,4 @@ def simulate(system: System, cfg: ModelConfig, plan: Plan,
                      rounds=rounds, prefill_busy=prefill_busy,
                      decode_busy=decode_busy, idle=idle,
                      occupancy=occupancy, slot_seconds=slot_seconds,
-                     flops=flops, bytes=bytes_, bound=bound)
+                     flops=flops, bytes=bytes_, bound=bound, events=events)

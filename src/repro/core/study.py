@@ -33,7 +33,7 @@ import math
 import time
 from dataclasses import dataclass
 from typing import (Dict, Iterable, Iterator, List, Mapping, Optional,
-                    Sequence, Union)
+                    Sequence, Tuple, Union)
 
 from ..configs.base import ModelConfig
 from . import area as area_mod
@@ -46,6 +46,7 @@ from .graph import Plan, build_layer, build_model
 from .hardware import Device, System
 from .ir import FusedMatmulSpec, Graph, MatmulSpec
 from .mapper import is_memoized, matmul_perf_batch_multi
+from . import obs
 from .precision import DEFAULT, PrecisionPolicy, policy_tag
 from .result_cache import MODEL_VERSION, DiskCache, content_key
 from . import simulator as sim_mod
@@ -134,6 +135,12 @@ class CaseResult:
     system_cost_usd: float      # device cost x device_count
     perf_per_dollar: float      # throughput / system_cost_usd
     sim: Optional[sim_mod.SimResult] = None   # serve stage: the full replay
+    #: per-op attribution of this case's evaluated graph(s) (core/obs.py);
+    #: None for serve-stage cases (the SimResult carries the replay)
+    attribution: Optional[obs.Attribution] = None
+    #: the primary graph's schedule.critical_breakdown(), largest first:
+    #: ((op name | "(stall)", seconds), ...) — queryable straight from CSV
+    critical: Tuple[Tuple[str, float], ...] = ()
 
     def to_row(self) -> dict:
         c = self.case
@@ -163,6 +170,10 @@ class CaseResult:
             "ttft_p99_s": s.ttft(99) if s else "",
             "tpot_p50_s": s.tpot(50) if s else "",
             "goodput_tok_s": s.goodput if s else "",
+            "elided_bytes": self.attribution.elided
+            if self.attribution is not None else "",
+            "critical_breakdown": "|".join(
+                f"{k}={v:.6g}" for k, v in self.critical),
         }
 
 
@@ -436,7 +447,7 @@ class Study:
     # ---- persistent CaseResult layer (ISSUE 6) -----------------------
     _CASE_DOC_FIELDS = ("latency", "throughput", "dominant",
                         "decode_dominant", "flops", "bytes", "prefill",
-                        "decode")
+                        "decode", "critical", "attribution")
 
     @staticmethod
     def _case_key(case: Case) -> str:
@@ -456,13 +467,22 @@ class Study:
         return {"latency": r.latency, "throughput": r.throughput,
                 "dominant": r.dominant, "decode_dominant": r.decode_dominant,
                 "flops": r.flops, "bytes": r.bytes,
-                "prefill": r.prefill_latency, "decode": r.decode_latency}
+                "prefill": r.prefill_latency, "decode": r.decode_latency,
+                "critical": [[k, v] for k, v in r.critical],
+                "attribution": r.attribution.to_doc()
+                if r.attribution is not None else None}
 
     def _case_from_doc(self, doc: dict, case: Case, mem: float,
                        fits: bool) -> Optional[CaseResult]:
         if not all(f in doc for f in self._CASE_DOC_FIELDS):
             return None                     # malformed/older entry: miss
         try:
+            att = None
+            if doc["attribution"] is not None:
+                att = obs.Attribution.from_doc(doc["attribution"])
+                if att is None:
+                    return None             # malformed attribution: miss
+            crit = tuple((str(k), float(v)) for k, v in doc["critical"])
             price_a, price_c = self._price(case.system)
             sys_cost = price_c * case.system.device_count
             thr = float(doc["throughput"])
@@ -472,7 +492,8 @@ class Study:
                 float(doc["flops"]), float(doc["bytes"]),
                 float(doc["prefill"]), float(doc["decode"]),
                 price_a, price_c, sys_cost,
-                thr / sys_cost if sys_cost > 0 else 0.0)
+                thr / sys_cost if sys_cost > 0 else 0.0,
+                attribution=att, critical=crit)
         except (TypeError, ValueError):
             return None
 
@@ -490,16 +511,18 @@ class Study:
         # ---- static verification pre-pass (ISSUE 7) ----------------------
         # plan + policy rules once per unique grid point, before any mapper
         # or memory work; cases sharing a point share one lint.
+        reg = obs.metrics()
         if self.verify_mode != "off":
-            linted = set()
-            for case in self.cases:
-                w = case.workload
-                point = (case.system, case.cfg, case.plan, case.policy,
-                         w.batch, w.total_len)
-                if point in linted:
-                    continue
-                linted.add(point)
-                verify_mod.verify_case(case, mode=self.verify_mode)
+            with reg.phase("verify"):
+                linted = set()
+                for case in self.cases:
+                    w = case.workload
+                    point = (case.system, case.cfg, case.plan, case.policy,
+                             w.batch, w.total_len)
+                    if point in linted:
+                        continue
+                    linted.add(point)
+                    verify_mod.verify_case(case, mode=self.verify_mode)
 
         # ---- memory-fit pre-pass (planner model; no evaluation cost) -----
         prelim = []
@@ -529,8 +552,12 @@ class Study:
                 if r is not None:
                     cached[idx] = r
                     stats.case_cache_hits += 1
+                    evaluators[case.system].stats.case_hits += 1
+                    reg.inc("study.case_hits")
                 else:
                     stats.case_cache_misses += 1
+                    evaluators[case.system].stats.case_misses += 1
+                    reg.inc("study.case_misses")
 
         # ---- grid-wide device-axis stacked mapper search -----------------
         t_pre = time.perf_counter()
@@ -556,7 +583,8 @@ class Study:
                         seen.add(pair)
                         pairs.append(pair)
         if pairs:
-            matmul_perf_batch_multi(pairs)
+            with reg.phase("presolve"):
+                matmul_perf_batch_multi(pairs)
         stats.matmul_pairs_presolved = len(pairs)
         stats.presolve_seconds = time.perf_counter() - t_pre
 
@@ -577,8 +605,9 @@ class Study:
                     price_a, price_c, sys_cost, 0.0))
                 continue
             stats.evaluated += 1
-            r = self._evaluate(case, mem, fits, evaluators[case.system],
-                               price_a, price_c, sys_cost)
+            with reg.phase("evaluate"):
+                r = self._evaluate(case, mem, fits, evaluators[case.system],
+                                   price_a, price_c, sys_cost)
             if idx in keys:
                 cc.put(keys[idx], self._case_to_doc(r))
             results.append(r)
@@ -631,6 +660,32 @@ class Study:
             dec_dom = max(dc_c.by_bound(), key=dc_c.by_bound().get)
             flops = pf_c.flops + dc_c.flops
             bytes_ = pf_c.bytes + dc_c.bytes
+        att, crit = self._attribution(case, ev)
         return CaseResult(case, latency, thr, mem, fits, dom, dec_dom,
                           flops, bytes_, pf, dc, price_a, price_c, sys_cost,
-                          thr / sys_cost if sys_cost > 0 else 0.0, sim=sim)
+                          thr / sys_cost if sys_cost > 0 else 0.0, sim=sim,
+                          attribution=att, critical=crit)
+
+    def _attribution(self, case: Case, ev: Evaluator
+                     ) -> Tuple[Optional[obs.Attribution],
+                                Tuple[Tuple[str, float], ...]]:
+        """Per-op attribution + critical-path breakdown of this case's
+        primary graph(s). Every spec is already in the Evaluator's cache
+        after _evaluate, so this re-prices nothing — it only re-assembles
+        the per-op rows the stage helpers collapsed into scalars. Serve
+        cases carry their SimResult instead."""
+        if case.stage == "serve":
+            return None, ()
+        graphs = self._graphs(case)
+        if case.stage in ("generate", "layer") and len(graphs) > 1:
+            sections = [("prefill/", graphs[0]), ("decode/", graphs[1])]
+        else:
+            sections = [("", graphs[0])]
+        costs = ev.evaluate_many([g for _, g in sections],
+                                 overlap=case.fusion.overlap)
+        atts = [obs.attribute(g, c, label=case.stage, prefix=pre)
+                for (pre, g), c in zip(sections, costs)]
+        att = atts[0] if len(atts) == 1 else obs.combine(case.stage, atts)
+        crit = tuple(sorted(costs[0].critical_breakdown().items(),
+                            key=lambda kv: (-kv[1], kv[0])))
+        return att, crit

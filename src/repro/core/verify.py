@@ -50,6 +50,7 @@ from .ir import (CollectiveSpec, ElementwiseSpec, FusedMatmulSpec, Graph,
 from .fusion import (_epilogue_ok, _in_elems, _out_elems, _out_write_bytes)
 from .hardware import Device, System
 from .precision import DEFAULT, PrecisionPolicy, get_dtype, mac_scale
+from .obs import metrics
 from .schedule import RESOURCES, Schedule
 
 if TYPE_CHECKING:                                   # annotation-only imports
@@ -128,6 +129,8 @@ def apply_mode(diagnostics: Sequence[Diagnostic], mode: str,
                stacklevel: int = 3) -> List[Diagnostic]:
     """Enforce `mode` over collected diagnostics (see module docstring)."""
     diags = list(diagnostics)
+    for d in diags:     # counted even when mode silences them (core/obs.py)
+        metrics().inc(f"verify.diagnostics.{d.severity}")
     if mode == "off" or not diags:
         return diags
     if mode == "error" and any(d.severity == "error" for d in diags):

@@ -1,0 +1,297 @@
+"""Observability subsystem (ISSUE 9): metrics registry, phase spans,
+compatibility shims, attribution records, and their Study/CaseResult
+wiring."""
+import warnings
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import fusion as fu
+from repro.core import hardware as hw
+from repro.core import obs
+from repro.core import result_cache
+from repro.core import verify as verify_mod
+from repro.core.evaluator import EvalStats, Evaluator
+from repro.core.fusion import fuse
+from repro.core.graph import Plan, build_model
+from repro.core.mapper import (MapperCacheStats, matmul_cache_stats,
+                               reset_matmul_cache_stats)
+from repro.core.study import Case, Study
+from repro.core.workload import Workload
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms():
+    reg = obs.MetricsRegistry()
+    assert reg.counter("x") == 0.0
+    reg.inc("x")
+    reg.inc("x", 2.5)
+    assert reg.counter("x") == 3.5
+    reg.set_gauge("g", 7.0)
+    assert reg.gauge("g") == 7.0
+    reg.observe("h", 1.0)
+    reg.observe("h", 3.0)
+    h = reg.histogram("h")
+    assert (h.count, h.total, h.min, h.max, h.mean) == (2, 4.0, 1.0, 3.0, 2.0)
+    snap = reg.snapshot()
+    assert snap["x"] == 3.5 and snap["gauge.g"] == 7.0
+    assert "x=3.5" in reg.summary()
+
+
+def test_registry_counters_prefix_filter():
+    reg = obs.MetricsRegistry()
+    reg.inc("a.one")
+    reg.inc("a.two")
+    reg.inc("b.one")
+    assert set(reg.counters("a.")) == {"a.one", "a.two"}
+
+
+def test_phase_spans_gated_by_enabled():
+    reg = obs.MetricsRegistry()
+    # off (default): shared no-op context manager, nothing recorded
+    cm1 = reg.phase("p")
+    cm2 = reg.phase("q")
+    assert cm1 is cm2          # the shared null span — zero allocation
+    with cm1:
+        pass
+    assert reg.phase_seconds() == {}
+    # on: wall-clock recorded per name, with entry counts
+    assert reg.set_enabled(True) is False
+    with reg.phase("p"):
+        pass
+    with reg.phase("p"):
+        pass
+    assert reg.phase_counts() == {"p": 2}
+    assert reg.phase_seconds()["p"] >= 0.0
+    snap = reg.snapshot()
+    assert snap["phase.p.count"] == 2
+    assert reg.set_enabled(False) is True
+
+
+def test_global_registry_is_shared():
+    assert obs.metrics() is obs.metrics()
+
+
+# ---------------------------------------------------------------------------
+# compatibility shims over the registry
+# ---------------------------------------------------------------------------
+
+def test_mapper_stats_shim_windows_the_registry():
+    reg = obs.metrics()
+    st = MapperCacheStats()          # fresh window: all zeros
+    assert (st.memo_hits, st.disk_hits, st.misses, st.evictions) \
+        == (0, 0, 0, 0)
+    reg.inc("mapper.memo_hits")
+    reg.inc("mapper.misses", 3)
+    assert st.memo_hits == 1 and st.misses == 3
+    assert "memo_hits=1" in st.summary() and "misses=3" in st.summary()
+    # a new window re-baselines without touching the monotone registry
+    before = reg.counter("mapper.misses")
+    st2 = MapperCacheStats()
+    assert st2.misses == 0
+    assert reg.counter("mapper.misses") == before
+
+
+def test_reset_matmul_cache_stats_rebaselines():
+    obs.metrics().inc("mapper.disk_hits", 5)
+    reset_matmul_cache_stats()
+    assert matmul_cache_stats().disk_hits == 0
+    obs.metrics().inc("mapper.disk_hits")
+    assert matmul_cache_stats().disk_hits == 1
+    reset_matmul_cache_stats()
+    assert matmul_cache_stats().disk_hits == 0
+
+
+def test_disk_cache_mirrors_into_registry(tmp_path):
+    reg = obs.metrics()
+    dc = result_cache.DiskCache("obs-test", root=tmp_path, enabled=True)
+    m0 = reg.counter("cache.obs-test.misses")
+    p0 = reg.counter("cache.obs-test.puts")
+    h0 = reg.counter("cache.obs-test.hits")
+    assert dc.get("0" * 64) is None
+    dc.put("0" * 64, {"v": 1})
+    assert dc.get("0" * 64) == {"v": 1}
+    assert reg.counter("cache.obs-test.misses") == m0 + 1
+    assert reg.counter("cache.obs-test.puts") == p0 + 1
+    assert reg.counter("cache.obs-test.hits") == h0 + 1
+    assert dc.stats.misses == 1 and dc.stats.puts == 1 and dc.stats.hits == 1
+
+
+def test_verify_diagnostics_counted_even_when_off():
+    reg = obs.metrics()
+    d = verify_mod.Diagnostic("test.rule", "warn", "synthetic")
+    w0 = reg.counter("verify.diagnostics.warn")
+    verify_mod.apply_mode([d], "off")
+    assert reg.counter("verify.diagnostics.warn") == w0 + 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        verify_mod.apply_mode([d, d], "warn")
+    assert reg.counter("verify.diagnostics.warn") == w0 + 3
+
+
+# ---------------------------------------------------------------------------
+# layer-group classification
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,group", [
+    ("qkv_proj", "attn"), ("qk_t+softmax", "attn"), ("a_mul_v", "attn"),
+    ("o_proj", "attn"), ("ln_attn", "attn"), ("rope", "attn"),
+    ("w1_proj+gelu", "mlp"), ("w2_proj", "mlp"), ("ln_mlp", "mlp"),
+    ("router", "mlp"), ("expert_w1", "mlp"),
+    ("allreduce_mlp", "comm"), ("moe_dispatch", "comm"), ("p2p", "comm"),
+    ("grad_ag", "comm"), ("act_rs", "comm"),
+    ("embed", "head"), ("lm_head", "head"), ("ln_final", "head"),
+    ("prefill/qkv_proj", "attn"), ("decode/w2_proj", "mlp"),
+    ("mystery_op", "other"),
+])
+def test_layer_group(name, group):
+    assert obs.layer_group(name) == group
+
+
+# ---------------------------------------------------------------------------
+# attribution records
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gpt3_attr():
+    cfg = get_config("gpt3-175b")
+    system = hw.dgx_a100(4)
+    ev = Evaluator(system, verify="off")
+    g = fuse(build_model(cfg, Plan(tp=4), 2, 256, kv_len=256), fu.FULL)
+    cost = ev.evaluate(g, overlap=True)
+    return g, cost, obs.attribute(g, cost, label="prefill")
+
+
+def test_attribute_rows_align_with_graph(gpt3_attr):
+    g, cost, att = gpt3_attr
+    assert len(att.rows) == len(g.nodes)
+    assert att.total == cost.latency
+    assert att.serial == cost.serial_latency
+    assert att.total <= att.serial          # overlap can only hide work
+    # per-row latency reconciles with the priced ops
+    for row, op in zip(att.rows, cost.ops):
+        assert row.latency == op.latency
+        assert row.bound == op.bound
+    # link exposure: hidden + exposed == total link occupancy
+    link_total = sum(r.latency for r in att.rows if r.resource == "link")
+    assert att.link_exposed + att.link_hidden == pytest.approx(link_total)
+
+
+def test_attribute_serial_graph_prefix_sums(gpt3_attr):
+    g, _, _ = gpt3_attr
+    ev = Evaluator(hw.dgx_a100(4), verify="off")
+    cost = ev.evaluate(g, overlap=False)
+    att = obs.attribute(g, cost)
+    assert att.total == att.serial
+    t = 0.0
+    for r in att.rows:
+        assert r.start == t and r.critical and r.exposed == r.latency
+        t = r.end
+    assert t == pytest.approx(att.serial)
+
+
+def test_attribution_outputs(gpt3_attr):
+    _, _, att = gpt3_attr
+    rows = att.to_rows()
+    assert rows[0]["name"] and "latency_s" in rows[0]
+    csv_text = att.to_csv()
+    assert csv_text.splitlines()[0].startswith("name,group,resource")
+    assert len(csv_text.splitlines()) == len(att.rows) + 1
+    groups = att.by_group()
+    assert {"attn", "mlp", "comm", "head"} <= set(groups)
+    assert sum(g["latency"] for g in groups.values()) \
+        == pytest.approx(sum(r.latency for r in att.rows))
+    assert att.to_json().startswith("{")
+
+
+def test_attribution_doc_round_trip(gpt3_attr):
+    _, _, att = gpt3_attr
+    doc = att.to_doc()
+    back = obs.Attribution.from_doc(doc)
+    assert back == att
+    assert obs.Attribution.from_doc({"label": "x"}) is None
+    assert obs.Attribution.from_doc({"label": "x", "total": 1.0,
+                                     "serial": 1.0, "rows": [["bad"]]}) \
+        is None
+
+
+def test_combine_concatenates_sections(gpt3_attr):
+    _, _, att = gpt3_attr
+    both = obs.combine("generate", [att, att])
+    assert both.label == "generate"
+    assert len(both.rows) == 2 * len(att.rows)
+    assert both.total == pytest.approx(2 * att.total)
+
+
+# ---------------------------------------------------------------------------
+# Study / CaseResult / EvalStats wiring
+# ---------------------------------------------------------------------------
+
+def test_evalstats_summary_includes_case_hits():
+    st = EvalStats(case_hits=3, case_misses=1)
+    assert "case_hits=3" in st.summary()
+    assert "case_misses=1" in st.summary()
+
+
+@pytest.fixture(scope="module")
+def small_study_run(tmp_path_factory):
+    cfg = get_config("qwen2-0.5b")
+    system = hw.dgx_a100(2)
+    case = Case(system, cfg, Plan(tp=2), Workload(2, 64, 8, samples=2),
+                stage="layer", fusion=fu.FULL)
+    root = tmp_path_factory.mktemp("case-cache")
+    with result_cache.overridden(root=root, enabled=True):
+        cold = Study(cases=[case], verify="off").run()
+        warm = Study(cases=[case], verify="off").run()
+    return case, cold, warm
+
+
+def test_case_result_carries_attribution(small_study_run):
+    case, cold, _ = small_study_run
+    r = cold[0]
+    assert r.attribution is not None
+    assert r.attribution.label == "layer"
+    # prefill + decode sections, prefixed
+    names = [row.name for row in r.attribution.rows]
+    assert any(n.startswith("prefill/") for n in names)
+    assert any(n.startswith("decode/") for n in names)
+    assert r.critical and r.critical[0][1] > 0.0
+    # sorted largest-first
+    vals = [v for _, v in r.critical]
+    assert vals == sorted(vals, reverse=True)
+
+
+def test_case_result_row_exposes_critical_breakdown(small_study_run):
+    _, cold, _ = small_study_run
+    row = cold[0].to_row()
+    assert "critical_breakdown" in row
+    assert "=" in row["critical_breakdown"]
+    assert row["elided_bytes"] == cold[0].attribution.elided
+
+
+def test_warm_rerun_serves_attribution_from_cache(small_study_run):
+    case, cold, warm = small_study_run
+    assert warm.stats.case_cache_hits == 1
+    assert warm[0].attribution == cold[0].attribution
+    assert warm[0].critical == cold[0].critical
+    assert warm[0].latency == cold[0].latency
+    ev = warm.evaluators[case.system]
+    assert ev.stats.case_hits == 1
+    assert "case_hits=1" in ev.stats.summary()
+
+
+def test_serve_cases_have_no_attribution():
+    import repro.core.simulator as sim_mod
+    from repro.core.workload import Trace, TrafficWorkload
+    cfg = get_config("qwen2-0.5b")
+    system = hw.dgx_a100(2)
+    traffic = TrafficWorkload.from_trace(Trace.constant(4, 0.0, 64, 4),
+                                         slots=4)
+    case = Case(system, cfg, Plan(tp=2), traffic, stage="serve")
+    res = Study(cases=[case], verify="off", result_cache=False).run()
+    assert res[0].attribution is None
+    assert res[0].critical == ()
+    assert isinstance(res[0].sim, sim_mod.SimResult)

@@ -26,11 +26,14 @@ import textwrap
 
 import pytest
 
-from repro.core import mapper, result_cache
+from repro.core import mapper, obs, result_cache, trace_export
 from repro.core.study import Study
 
 #: functions on result_cache-keyed paths: keys must be stable AND the
-#: values stored under them must be reproducible
+#: values stored under them must be reproducible. The trace-export path
+#: (ISSUE 9) is held to the same rules: virtual-timestamp traces must be
+#: byte-identical across runs, so no wall clocks, entropy, env reads or
+#: dict-order iteration anywhere between a Schedule/SimResult and its JSON.
 LINTED = [
     mapper._gather_chunk,
     mapper._chunk_tables_numpy,
@@ -42,6 +45,13 @@ LINTED = [
     result_cache.content_key,
     Study._case_key,                # staticmethod resolves to the function
     Study._case_to_doc,
+    trace_export._ts,
+    trace_export.schedule_trace_events,
+    trace_export.simulation_trace_events,
+    trace_export.to_perfetto_json,
+    trace_export.validate_trace_events,
+    obs.attribute,
+    obs.Attribution.to_doc,         # feeds Study._case_to_doc
 ]
 
 _BANNED_NAMES = {"time", "random", "datetime", "uuid", "secrets"}
