@@ -13,6 +13,10 @@ ISSUE 6 additions: the same workload is also timed on the JAX chunk backend
 numpy path), and through the persistent disk layer — cold populate versus a
 warm process-restart replay (in-memory memo dropped, disk entries hit) in a
 private temp directory so the user's real cache is never touched.
+
+ISSUE 10 addition: the same presolve with pruning off vs on — the
+lower-bound cutoff must cut the evaluated candidate rows by >= 50% on this
+workload (acceptance claim) with bit-identical latencies.
 """
 from __future__ import annotations
 
@@ -20,11 +24,13 @@ import tempfile
 import time
 
 from repro.core import hardware as hw
+from repro.core import obs
 from repro.core import result_cache
 from repro.core.evaluator import Evaluator
 from repro.core.graph import Plan, build_model
-from repro.core.mapper import (clear_matmul_cache, matmul_cache_stats,
-                               reset_matmul_cache_stats, set_mapper_backend)
+from repro.core.mapper import (clear_matmul_cache, get_mapper_prune,
+                               matmul_cache_stats, reset_matmul_cache_stats,
+                               set_mapper_backend, set_mapper_prune)
 
 from .common import emit
 
@@ -66,6 +72,24 @@ def run() -> dict:
 
         exact = all(abs(a.latency - b.latency) <= 1e-12 * abs(b.latency)
                     for a, b in zip(costs, seed_costs))
+
+        # ---- ISSUE 10: candidate pruning off vs on on this presolve ------
+        reg = obs.metrics()
+        prev_prune = get_mapper_prune()
+        try:
+            set_mapper_prune("off")
+            base = reg.counter("mapper.rows_evaluated")
+            dt_off, off_costs, _ = _timed_eval(node, graphs)
+            rows_off = reg.counter("mapper.rows_evaluated") - base
+            set_mapper_prune("on")
+            base = reg.counter("mapper.rows_evaluated")
+            dt_on, on_costs, _ = _timed_eval(node, graphs)
+            rows_on = reg.counter("mapper.rows_evaluated") - base
+        finally:
+            set_mapper_prune(prev_prune)
+        prune_exact = all(a.latency == b.latency
+                          for a, b in zip(on_costs, off_costs))
+        prune_cut_pct = 100.0 * (1.0 - rows_on / max(rows_off, 1.0))
 
         # ---- JAX chunk backend: trace-included cold, then warm-trace -----
         try:
@@ -114,6 +138,10 @@ def run() -> dict:
     emit("mapper/disk_cache", dt_disk * 1e6,
          f"cold_s={dt_cold:.3f};warm_disk_s={dt_disk:.4f};"
          f"speedup={disk_speedup:.0f}x;disk_hits={ms.disk_hits}")
+    emit("mapper/prune", dt_on * 1e6,
+         f"off_s={dt_off:.2f};on_s={dt_on:.2f};"
+         f"speedup={dt_off / max(dt_on, 1e-9):.2f}x;"
+         f"rows={rows_on:.0f}/{rows_off:.0f};cut={prune_cut_pct:.1f}%")
     pf, dcs = costs[0], costs[1:]
     # graphs are whole-model (all 96 layers via node repeats) — no extra x96
     dec_ms = sum(d.latency for d in dcs) / len(dcs) * 1e3
@@ -131,6 +159,14 @@ def run() -> dict:
         "disk_warm_speedup_x": round(disk_speedup, 1),
         "disk_warm_bitwise_equal": disk_exact,
         "disk_warm_faster_10x": disk_speedup >= 10,
+        # ISSUE 10 acceptance: pruning alone cuts >= 50% of the candidate
+        # rows on the GPT-3 presolve, bit-identically
+        "prune_candidates_unpruned": int(rows_off),
+        "prune_candidates_evaluated": int(rows_on),
+        "prune_candidates_reduction_pct": round(prune_cut_pct, 1),
+        "prune_cut_at_least_half": prune_cut_pct >= 50.0,
+        "prune_bitwise_equal": prune_exact,
+        "prune_speedup_x": round(dt_off / max(dt_on, 1e-9), 2),
     })
     return checks
 

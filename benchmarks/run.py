@@ -18,11 +18,19 @@ tracked next to the modeled numbers.
 
 ``--trace-dir DIR`` drops the smoke Perfetto traces (trace_smoke) into
 DIR — CI uploads them as artifacts.
+
+``--baseline PATH`` points at the previous run's BENCH_*.json artifact;
+when it exists (default: whatever already sits at the ``--json`` path,
+i.e. the artifact the previous PR's CI run left behind) the report gains a
+``bench_cold_vs_warm`` delta section and the console a ``#
+BENCH_cold_vs_warm`` block, so CI surfaces per-benchmark speedups and
+regressions between PRs instead of only absolute numbers.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import subprocess
 import sys
@@ -38,6 +46,44 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def _load_baseline(path):
+    """The previous BENCH_*.json report at `path`, or None when absent or
+    unreadable (first run, corrupt artifact) — deltas are best-effort and
+    must never fail the suite."""
+    if not path:
+        return None
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return doc if isinstance(doc, dict) and "benchmarks" in doc else None
+
+
+def delta_vs_previous(prev, timings):
+    """`bench_cold_vs_warm` section: per-benchmark wall-clock vs the
+    previous report. `speedup` > 1 means this run was faster. Benchmarks
+    present on only one side are skipped — suite composition changes
+    (quick vs full, new modules) must not fabricate deltas."""
+    bench = {}
+    for name in sorted(timings):
+        doc = prev["benchmarks"].get(name)
+        if not isinstance(doc, dict) or "seconds" not in doc:
+            continue
+        prev_s = float(doc["seconds"])
+        cur_s = float(timings[name])
+        bench[name] = {
+            "seconds_prev": round(prev_s, 4),
+            "seconds": round(cur_s, 4),
+            "speedup": round(prev_s / cur_s, 4) if cur_s > 0 else 0.0,
+        }
+    return {
+        "previous_git_sha": prev.get("git_sha", "unknown"),
+        "previous_suite": prev.get("suite", "unknown"),
+        "benchmarks": bench,
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -48,7 +94,14 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-dir", metavar="DIR", default=None,
                     help="write the smoke Perfetto traces to DIR "
                          "(uploaded as CI artifacts)")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="previous BENCH_*.json to diff against (default: "
+                         "the existing file at --json PATH, if any)")
     args = ap.parse_args(argv)
+    baseline_path = args.baseline
+    if baseline_path is None and args.json and os.path.exists(args.json):
+        baseline_path = args.json
+    baseline = _load_baseline(baseline_path)
 
     from repro.core import obs
     from repro.core.result_cache import MODEL_VERSION
@@ -125,6 +178,16 @@ def main(argv=None) -> None:
     for name, checks in all_checks.items():
         for k, v in checks.items():
             print(f"# {name}.{k} = {v}")
+    delta = None
+    if baseline is not None:
+        delta = delta_vs_previous(baseline, timings)
+        print("#")
+        print(f"# ==== BENCH_cold_vs_warm (vs "
+              f"{delta['previous_git_sha'][:12]} "
+              f"[{delta['previous_suite']}]) ====")
+        for name, d in delta["benchmarks"].items():
+            print(f"# BENCH_cold_vs_warm.{name}: {d['seconds_prev']}s -> "
+                  f"{d['seconds']}s  ({d['speedup']}x)")
     if args.json:
         sha = _git_sha()
         report = {
@@ -143,6 +206,8 @@ def main(argv=None) -> None:
                 for name in timings
             },
         }
+        if delta is not None:
+            report["bench_cold_vs_warm"] = delta
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -21,18 +21,29 @@ persistent CaseResult cache (private temp dir) must be >= 10x faster than the
 cold run (>= 5x in --quick's shrunken grid, where fixed overhead dominates)
 and bit-identical — the regression threshold is a hard claim check, so a
 cache-layer slowdown fails CI.
+
+ISSUE 10 adds the cold-path measurement: the same grid fully uncached, run
+(a) with pruning off, serial — the exhaustive baseline; (b) with pruning
+on, serial; (c) with pruning on across `workers=` process shards. Rows
+must be identical across all three (CI-asserted), the pruned search must
+evaluate strictly fewer candidate rows than the exhaustive one
+(CI-asserted), and `cold_speedup_x` = (a)/(c) carries the >= 3x acceptance
+claim — gated on hosts with >= 4 cores, where the parallel win exists.
 """
 from __future__ import annotations
 
+import os
 import tempfile
 import time
 
 from repro.core import hardware as hw
 from repro.core import inference_model as im
+from repro.core import obs
 from repro.core import result_cache
 from repro.core.evaluator import Evaluator
 from repro.core.graph import Plan
-from repro.core.mapper import clear_matmul_cache
+from repro.core.mapper import (clear_matmul_cache, get_mapper_prune,
+                               set_mapper_prune)
 from repro.core.study import Case, Study
 from repro.core.workload import Workload
 from repro.configs import get_config
@@ -107,6 +118,39 @@ def run(quick: bool = False) -> dict:
     # asserted floor drops to 5x there; the acceptance claim is the full 10x
     warm_floor = 5.0 if quick else 10.0
 
+    # ---- ISSUE 10 cold path: pruned search + parallel shards --------------
+    reg = obs.metrics()
+    workers = 2 if quick else (os.cpu_count() or 1)
+    prev_prune = get_mapper_prune()
+
+    def _cold_run(prune, n_workers):
+        set_mapper_prune(prune)
+        clear_matmul_cache()
+        base = reg.counter("mapper.rows_evaluated")
+        t0 = time.perf_counter()
+        r = Study(cases=cases, enforce_fits=False).run(workers=n_workers)
+        dt = time.perf_counter() - t0
+        rows = reg.counter("mapper.rows_evaluated") - base
+        return r, dt, rows
+
+    with result_cache.disabled():
+        try:
+            res_off, dt_cold_off, rows_off = _cold_run("off", None)
+            res_on, dt_cold_on, rows_on = _cold_run("on", None)
+            res_par, dt_cold_par, _ = _cold_run("on", workers)
+        finally:
+            set_mapper_prune(prev_prune)
+            clear_matmul_cache()
+    prune_rows_identical = res_on.to_rows() == res_off.to_rows()
+    parallel_rows_identical = res_par.to_rows() == res_off.to_rows()
+    prune_speedup = dt_cold_off / max(dt_cold_on, 1e-9)
+    cold_speedup = dt_cold_off / max(dt_cold_par, 1e-9)
+    emit("study_speed/cold_path", dt_cold_par * 1e6,
+         f"off_s={dt_cold_off:.2f};prune_s={dt_cold_on:.2f};"
+         f"par_s={dt_cold_par:.2f};workers={workers};"
+         f"prune={prune_speedup:.2f}x;cold={cold_speedup:.2f}x;"
+         f"rows={rows_on:.0f}/{rows_off:.0f}")
+
     exact = all(r.latency == a.latency == b.latency == c.latency
                 for r, a, b, c in zip(res, loop, seed, cold))
     speedup_loop = dt_loop / max(dt_study, 1e-9)
@@ -137,6 +181,18 @@ def run(quick: bool = False) -> dict:
         "warm_rerun_speedup_x": round(warm_speedup, 1),
         "warm_rerun_bitwise_equal": warm_exact,
         "warm_rerun_fast_enough": warm_speedup >= warm_floor,
+        # ISSUE 10 cold path (all CI-asserted except the host-gated target)
+        "cold_workers": workers,
+        "prune_candidates_unpruned": int(rows_off),
+        "prune_candidates_evaluated": int(rows_on),
+        "prune_rows_identical": prune_rows_identical,
+        "parallel_rows_identical": parallel_rows_identical,
+        "prune_speedup_x": round(prune_speedup, 2),
+        "cold_speedup_x": round(cold_speedup, 2),
+        # the >= 3x acceptance claim needs real cores to shard across; on
+        # small hosts the identity checks above still gate correctness
+        "cold_speedup_target_ok": cold_speedup >= 3.0
+        or (os.cpu_count() or 1) < 4,
     }
 
 

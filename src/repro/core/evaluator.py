@@ -20,8 +20,8 @@ model_ops multiplied per-op costs by the layer count.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from dataclasses import dataclass, fields
+from typing import Dict, List, Mapping, Sequence
 
 from .hardware import Device, Link, System
 from . import operators as ops
@@ -71,6 +71,20 @@ class EvalStats:
         regression in overlap modeling shows up here in bench logs."""
         return self.scheduled_seconds / self.serial_seconds \
             if self.serial_seconds > 0 else 1.0
+
+    def to_doc(self) -> Dict[str, float]:
+        """Plain-dict snapshot of every field — the pickle-friendly form a
+        Study worker ships its shard's stats home in."""
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    def merge(self, doc: Mapping[str, float]) -> None:
+        """Accumulate a worker shard's `to_doc()` snapshot into this
+        instance (field-wise addition; unknown keys are ignored so docs
+        from newer/older workers degrade gracefully)."""
+        for f in fields(self):
+            v = doc.get(f.name)
+            if v:
+                setattr(self, f.name, getattr(self, f.name) + v)
 
     def summary(self) -> str:
         return (f"graphs={self.graphs} nodes={self.nodes} "

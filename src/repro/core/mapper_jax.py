@@ -11,7 +11,11 @@ Padding buckets: jit recompiles per input shape, and chunk row counts vary
 with every (device, shape) mix. Chunks are therefore padded up to the next
 power-of-two bucket (min 4096 rows) with infeasible filler rows (`p_ok` all
 False — they price to inf and belong to no pair's segment), so a handful of
-traces serve every chunk the engine will ever build. Dtype mix (int64 byte
+traces serve every chunk the engine will ever build. The ISSUE 10 pruning
+layer (mapper._prune_pairs) needs nothing special here: its seed-row
+chunks and cutoff-filtered chunks are ordinary row sets that land in the
+same buckets, and because no table op reduces across rows, dropping rows
+cannot change any surviving row's total. Dtype mix (int64 byte
 widths vs float64 sub-byte widths) keys its own trace, exactly mirroring the
 numpy path's dtype promotion rule.
 

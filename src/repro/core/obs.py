@@ -195,6 +195,33 @@ class MetricsRegistry:
             out[f"phase.{k}.seconds"] = cv[1]
         return out
 
+    def merge_delta(self, delta: Dict[str, float]) -> None:
+        """Fold a worker process's snapshot delta (`snapshot()` minus a
+        baseline taken at worker start) into this registry: counters and
+        phase spans ADD, gauges overwrite (last writer wins — gauges are
+        point-in-time readings, not totals).
+
+        This is what makes baseline-window views (`mapper.MapperCacheStats`)
+        merge-safe across `Study.run(workers=N)` joins: worker activity is
+        invisible to the parent's counters while the shard runs, then lands
+        exactly once at join — a window constructed before the run reports
+        the summed cross-process activity, never a torn intermediate state.
+        """
+        for k in sorted(delta):
+            v = delta[k]
+            if k.startswith("gauge."):
+                self._gauges[k[len("gauge."):]] = v
+            elif k.startswith("phase.") and k.endswith(".count"):
+                ph = self._phases.setdefault(
+                    k[len("phase."):-len(".count")], [0, 0.0])
+                ph[0] += v
+            elif k.startswith("phase.") and k.endswith(".seconds"):
+                ph = self._phases.setdefault(
+                    k[len("phase."):-len(".seconds")], [0, 0.0])
+                ph[1] += v
+            else:
+                self.inc(k, v)
+
     def summary(self) -> str:
         parts = [f"{k}={v:g}" for k, v in sorted(self._counters.items())]
         parts += [f"phase.{k}={v[1]:.4f}s/{int(v[0])}"

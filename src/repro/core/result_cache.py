@@ -190,6 +190,13 @@ class DiskCache:
     (same-directory temp + os.replace); all reads are corruption-tolerant.
     A DiskCache constructed while the global switch is off (or pointing at
     an unwritable root) behaves as an always-miss, swallow-writes cache.
+
+    Concurrency contract (relied on by `Study.run(workers=N)`, ISSUE 10):
+    keys are content hashes, so two processes can only ever race on a key
+    by writing the SAME bytes; with each write staged in the destination
+    directory and published by `os.replace`, readers see either a complete
+    previous document or a complete identical one — never a torn file —
+    and last-writer-wins is a no-op. No cross-process locking is needed.
     """
 
     def __init__(self, namespace: str, root: Optional[os.PathLike] = None,

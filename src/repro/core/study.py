@@ -31,9 +31,10 @@ import csv
 import io
 import math
 import time
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
-from typing import (Dict, Iterable, Iterator, List, Mapping, Optional,
-                    Sequence, Tuple, Union)
+from typing import (Any, Dict, Iterable, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple, Union, cast)
 
 from ..configs.base import ModelConfig
 from . import area as area_mod
@@ -48,6 +49,7 @@ from .ir import FusedMatmulSpec, Graph, MatmulSpec
 from .mapper import is_memoized, matmul_perf_batch_multi
 from . import obs
 from .precision import DEFAULT, PrecisionPolicy, policy_tag
+from . import result_cache as result_cache_mod
 from .result_cache import MODEL_VERSION, DiskCache, content_key
 from . import simulator as sim_mod
 from . import verify as verify_mod
@@ -348,6 +350,9 @@ class Study:
         # True forces the layer on for this Study, False opts out.
         self._case_cache = None if result_cache is False \
             else DiskCache("cases", enabled=result_cache)
+        # the caller's tri-state (None=follow global / True / False), so
+        # run(workers=N) shard processes rebuild the same cache policy
+        self._result_cache_opt = result_cache
         # static verification mode (ISSUE 7): plan/policy rules run once per
         # unique grid point before any evaluation; graphs are linted by the
         # shared Evaluators as cases price. enforce_fits owns the memory
@@ -498,7 +503,68 @@ class Study:
             return None
 
     # ------------------------------------------------------------------
-    def run(self) -> StudyResult:
+    def run(self, workers: Optional[int] = None) -> StudyResult:
+        """Evaluate the grid. `workers=N` (N >= 2) shards the cases across
+        a ProcessPoolExecutor — deterministic round-robin by case index, so
+        `StudyResult` rows come back byte-identical to the serial path (the
+        paper's core invariant: case numbers depend only on case content).
+        Each worker runs an ordinary serial Study over its shard with its
+        own Evaluators, sharing warmth through the content-hashed disk
+        caches (atomic per-entry writes make concurrent same-key puts
+        safe); stats, EvalStats and MetricsRegistry counters merge at join
+        (`MetricsRegistry.merge_delta`). `workers=None`/0/1 is the
+        unchanged serial path."""
+        n = 1 if workers is None else int(workers)
+        if n < 0:
+            raise ValueError(f"workers must be >= 0, got {workers}")
+        if n <= 1 or len(self.cases) < 2:
+            return self._run_serial()
+        return self._run_parallel(min(n, len(self.cases)))
+
+    def _run_parallel(self, workers: int) -> StudyResult:
+        t0 = time.perf_counter()
+        reg = obs.metrics()
+        from .mapper import get_mapper_backend, get_mapper_prune
+        common = (self.enforce_fits, self._result_cache_opt,
+                  self.verify_mode, get_mapper_backend(), get_mapper_prune(),
+                  str(result_cache_mod.cache_root()),
+                  result_cache_mod.cache_enabled(), reg.enabled)
+        idx_shards = [list(range(w, len(self.cases), workers))
+                      for w in range(workers)]
+        payloads = [([self.cases[i] for i in sh],) + common
+                    for sh in idx_shards]
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            outs = list(pool.map(_study_worker, payloads))
+
+        results: List[Optional[CaseResult]] = [None] * len(self.cases)
+        stats = StudyStats(cases=len(self.cases))
+        evaluators: Dict[System, Evaluator] = {}
+        for case in self.cases:
+            if case.system not in evaluators:
+                evaluators[case.system] = self._evaluator(case.system)
+        stats.systems = len(evaluators)
+        stats.devices = len({s.device for s in evaluators})
+        for sh, (shard_results, wstats, ev_docs, delta) in zip(idx_shards,
+                                                               outs):
+            for i, r in zip(sh, shard_results):
+                results[i] = r
+            stats.evaluated += wstats.evaluated
+            stats.skipped_unfit += wstats.skipped_unfit
+            stats.matmul_pairs_presolved += wstats.matmul_pairs_presolved
+            stats.case_cache_hits += wstats.case_cache_hits
+            stats.case_cache_misses += wstats.case_cache_misses
+            stats.presolve_seconds += wstats.presolve_seconds
+            reg.merge_delta(delta)
+            for system, doc in ev_docs:
+                ev = evaluators.get(system)
+                if ev is None:
+                    evaluators[system] = ev = self._evaluator(system)
+                ev.stats.merge(doc)
+        stats.total_seconds = time.perf_counter() - t0
+        return StudyResult(cast(List[CaseResult], results), stats,
+                           evaluators)
+
+    def _run_serial(self) -> StudyResult:
         t0 = time.perf_counter()
         stats = StudyStats(cases=len(self.cases))
         evaluators: Dict[System, Evaluator] = {}
@@ -689,3 +755,37 @@ class Study:
         crit = tuple(sorted(costs[0].critical_breakdown().items(),
                             key=lambda kv: (-kv[1], kv[0])))
         return att, crit
+
+
+def _study_worker(payload: Tuple[Any, ...]) -> Tuple[Any, ...]:
+    """Entry point of one `Study.run(workers=N)` shard process.
+
+    The parent ships its resolved configuration explicitly (cache root +
+    enabled flag, mapper backend and prune mode, verify mode, phase-span
+    switch) rather than relying on inherited globals, so shards behave
+    identically under fork and spawn start methods — runtime overrides like
+    `result_cache.overridden(root=...)` are re-applied here. The shard runs
+    as a plain serial Study (its own Evaluators, its own case-cache
+    lookups) and returns its ordered CaseResults plus the stats and the
+    registry counter delta the parent merges at join."""
+    (cases, enforce_fits, use_cache, verify_mode, backend, prune,
+     cache_root, cache_enabled, spans) = payload
+    from . import mapper
+    result_cache_mod.configure(root=cache_root, enabled=cache_enabled)
+    try:
+        mapper.set_mapper_backend(backend)
+    except ImportError:                 # jax missing in the child: degrade
+        mapper.set_mapper_backend("numpy")
+    mapper.set_mapper_prune(prune)
+    reg = obs.metrics()
+    reg.set_enabled(spans)
+    base = reg.snapshot()
+    st = Study(cases=list(cases), enforce_fits=enforce_fits,
+               result_cache=use_cache, verify=verify_mode)
+    res = st._run_serial()
+    snap = reg.snapshot()
+    delta = {k: v - base.get(k, 0.0) for k, v in sorted(snap.items())
+             if v != base.get(k, 0.0)}
+    ev_docs = [(system, ev.stats.to_doc())
+               for system, ev in res.evaluators.items()]
+    return res.results, res.stats, ev_docs, delta

@@ -1,0 +1,50 @@
+"""ISSUE 10 satellite: benchmarks/run.py cold-vs-warm report deltas.
+
+`--json` reports diff against the previous BENCH_*.json artifact (the
+`bench_cold_vs_warm` section). The helpers are pure, so they are unit
+tested here without running the benchmark suite itself.
+"""
+import json
+
+from benchmarks.run import _load_baseline, delta_vs_previous
+
+PREV = {
+    "suite": "quick",
+    "git_sha": "abc123",
+    "benchmarks": {
+        "study_speed": {"seconds": 10.0, "checks": {}},
+        "fig6_area": {"seconds": 2.0, "checks": {}},
+        "retired_bench": {"seconds": 1.0, "checks": {}},
+        "broken": "not-a-dict",
+    },
+}
+
+
+def test_delta_vs_previous_speedups():
+    d = delta_vs_previous(PREV, {"study_speed": 2.5, "fig6_area": 4.0,
+                                 "new_bench": 1.0})
+    assert d["previous_git_sha"] == "abc123"
+    assert d["previous_suite"] == "quick"
+    b = d["benchmarks"]
+    # only benchmarks present (and well-formed) on both sides are diffed
+    assert sorted(b) == ["fig6_area", "study_speed"]
+    assert b["study_speed"] == {"seconds_prev": 10.0, "seconds": 2.5,
+                                "speedup": 4.0}
+    assert b["fig6_area"]["speedup"] == 0.5      # regression: < 1
+
+
+def test_delta_vs_previous_zero_seconds():
+    d = delta_vs_previous(PREV, {"fig6_area": 0.0})
+    assert d["benchmarks"]["fig6_area"]["speedup"] == 0.0
+
+
+def test_load_baseline(tmp_path):
+    p = tmp_path / "BENCH_quick.json"
+    assert _load_baseline(None) is None
+    assert _load_baseline(str(p)) is None                 # absent
+    p.write_text("{not json")
+    assert _load_baseline(str(p)) is None                 # corrupt
+    p.write_text(json.dumps({"no_benchmarks": 1}))
+    assert _load_baseline(str(p)) is None                 # wrong shape
+    p.write_text(json.dumps(PREV))
+    assert _load_baseline(str(p)) == PREV

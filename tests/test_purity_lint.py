@@ -36,11 +36,16 @@ from repro.core.study import Study
 #: dict-order iteration anywhere between a Schedule/SimResult and its JSON.
 LINTED = [
     mapper._gather_chunk,
+    mapper._chunk_tables,
     mapper._chunk_tables_numpy,
     mapper._pick_winners,
     mapper._solve_chunk,
     mapper._pair_key,
+    mapper._pair_sig,
     mapper._result_to_doc,
+    mapper._row_lower_bounds,
+    mapper._seed_rows,
+    mapper._prune_pairs,
     result_cache.canonical,
     result_cache.content_key,
     Study._case_key,                # staticmethod resolves to the function
